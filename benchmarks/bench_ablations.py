@@ -1,0 +1,42 @@
+"""Paper Fig 4 ablations: residual vs direct learning, skipping vs plain
+DNN, cross-field vs single-field — PSNR after equal training budgets."""
+from __future__ import annotations
+
+import time
+
+from . import common
+from repro import core
+from repro.core import metrics
+from repro.data import fields as F
+
+
+def run(full: bool = False):
+    shape = (32, 48, 48) if full else (24, 40, 40)
+    epochs = 40 if full else 30
+    flds = F.make_fields("nyx", shape=shape, seed=2)
+    target, aux = "temperature", "dark_matter_density"
+
+    variants = {
+        "neurlz": dict(learn_residual=True, skip=True,
+                       cross_field={target: (aux,)}),
+        "non_residual": dict(learn_residual=False, skip=True,
+                             cross_field={target: (aux,)}),
+        "non_skipping": dict(learn_residual=True, skip=False,
+                             cross_field={target: (aux,)}),
+        "sflz_single_field": dict(learn_residual=True, skip=True,
+                                  cross_field={}),
+    }
+    base_sub = {target: flds[target], aux: flds[aux]}
+    for label, kw in variants.items():
+        sub = dict(base_sub) if kw.get("cross_field") else {target: flds[target]}
+        cfg = core.NeurLZConfig(epochs=epochs, mode="relaxed", **kw)
+        t0 = time.time()
+        arc = core.compress(sub, rel_eb=1e-2, config=cfg)
+        dec = core.decompress(arc)
+        p = metrics.psnr(flds[target], dec[target])
+        common.csv_row(f"fig4/{label}", (time.time() - t0) * 1e6,
+                       f"psnr={p:.2f};epochs={epochs}")
+
+
+if __name__ == "__main__":
+    run()

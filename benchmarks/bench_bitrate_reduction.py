@@ -1,0 +1,53 @@
+"""Paper Table 2: relative bit-rate reduction (%) at equal PSNR, across
+datasets x error bounds x conventional compressors."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from . import common
+from repro.data import fields as F
+
+
+def run(full: bool = False):
+    shape = (64, 64, 64) if full else (24, 40, 40)
+    epochs = 60 if full else 40
+    bounds = [1e-2, 5e-3, 1e-3] if not full else [1e-2, 5e-3, 1e-3, 5e-4, 1e-4]
+    rows = []
+    for dataset in ("nyx", "miranda", "hurricane"):
+        flds = F.make_fields(dataset, shape=shape, seed=2)
+        names = F.DATASET_FIELDS[dataset][:2] if not full else F.DATASET_FIELDS[dataset]
+        cross = F.DEFAULT_CROSS_FIELD[dataset]
+        for comp in ("szlike", "zfplike"):
+            for name in names:
+                sub = {name: flds[name]}
+                aux = [a for a in cross.get(name, ()) if a != name][:1]
+                cf = {name: tuple(aux)} if aux else {}
+                for a in aux:
+                    sub[a] = flds[a]
+                curve = common.rd_curve(flds[name], comp,
+                                        [3e-2, 1e-2, 3e-3, 1e-3, 3e-4])
+                for eb in bounds:
+                    t0 = time.time()
+                    arc, dec, out, t = common.run_neurlz(
+                        sub, eb, compressor=comp, mode="strict",
+                        epochs=epochs, cross_field=cf)
+                    r = out[name]
+                    conv_br = common.equal_psnr_bitrate(curve, r["psnr"])
+                    red = 100.0 * (1.0 - r["bitrate"] / conv_br)
+                    red_am = 100.0 * (1.0 - r["bitrate_amortized"] / conv_br)
+                    rows.append((dataset, comp, name, eb, r["psnr"],
+                                 r["bitrate"], conv_br, red, red_am))
+                    common.csv_row(
+                        f"table2/{dataset}/{comp}/{name}/eb{eb:g}",
+                        (time.time() - t0) * 1e6,
+                        f"psnr={r['psnr']:.2f};bitrate={r['bitrate']:.3f};"
+                        f"conv_equal_psnr_bitrate={conv_br:.3f};"
+                        f"reduction_pct={red:.1f};"
+                        f"reduction_amortized_pct={red_am:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

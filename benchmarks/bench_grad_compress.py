@@ -1,0 +1,61 @@
+"""Framework feature: NeurLZ-style compression applied to gradients and
+checkpoints (the paper's technique in the trainer, DESIGN.md §4)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common
+from repro import configs
+from repro.models import model as M
+from repro.optim import grad_compress as GC
+
+
+def run(full: bool = False):
+    cfg = configs.get_reduced("qwen3-4b")
+    model = M.build_model(cfg, model_axis=1)
+    params, opt = M.init_train_state(model)
+    batch = M.demo_batch(cfg, batch=4, seq=64)
+
+    def loss_fn(p):
+        return model.loss(p, batch)
+
+    grads = jax.grad(loss_fn)(params)
+
+    # int8 error-feedback quantization: wire-byte ratio + error
+    t0 = time.time()
+    ef = GC.init_ef(grads)
+    q, s, ef2 = GC.quantize_ef(grads, ef, bits=8)
+    deq = GC.dequantize(q, s)
+    g_flat = np.concatenate([np.asarray(g, np.float32).ravel()
+                             for g in jax.tree.leaves(grads)])
+    d_flat = np.concatenate([np.asarray(g, np.float32).ravel()
+                             for g in jax.tree.leaves(deq)])
+    rel_rmse = float(np.sqrt(np.mean((g_flat - d_flat) ** 2))
+                     / (np.sqrt(np.mean(g_flat ** 2)) + 1e-30))
+    common.csv_row("gradcomp/int8_ef", (time.time() - t0) * 1e6,
+                   f"wire_ratio=4.0;rel_rmse={rel_rmse:.4f}")
+
+    # NeurLZ error-bounded archive of the gradient tree
+    t0 = time.time()
+    rep = GC.neurlz_grad_archive(grads, rel_eb=1e-3)
+    common.csv_row("gradcomp/neurlz_eb1e-3", (time.time() - t0) * 1e6,
+                   f"ratio={rep['ratio']:.2f};raw_mb={rep['raw_bytes']/2**20:.2f}")
+
+    # lossy checkpoint compression ratio
+    from repro.checkpoint.checkpoint import _flatten, _pack_arrays
+    t0 = time.time()
+    flat = _flatten(params)
+    raw = sum(a.nbytes for a in flat.values())
+    lossless = len(_pack_arrays(flat))
+    lossy = len(_pack_arrays(flat, lossy_eb=1e-4))
+    common.csv_row("ckptcomp/weights", (time.time() - t0) * 1e6,
+                   f"raw_mb={raw/2**20:.2f};lossless_ratio={raw/lossless:.2f};"
+                   f"neurlz_eb1e-4_ratio={raw/lossy:.2f}")
+
+
+if __name__ == "__main__":
+    run()

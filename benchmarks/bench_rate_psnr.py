@@ -1,0 +1,39 @@
+"""Paper Fig 10: bitrate-vs-PSNR curves — conventional, SFLZ (single-field)
+and NeurLZ (cross-field) for both compressor families."""
+from __future__ import annotations
+
+import time
+
+from . import common
+from repro.data import fields as F
+
+
+def run(full: bool = False):
+    shape = (48, 64, 64) if full else (24, 40, 40)
+    epochs = 40 if full else 30
+    flds = F.make_fields("nyx", shape=shape, seed=2)
+    target, aux = "temperature", "dark_matter_density"
+    bounds = [1e-2, 3e-3, 1e-3]
+    for comp in ("szlike", "zfplike"):
+        curve = common.rd_curve(flds[target], comp, bounds)
+        for (p, b), eb in zip(curve, sorted(bounds, reverse=True)):
+            common.csv_row(f"fig10/{comp}/conv/eb{eb:g}", 0.0,
+                           f"psnr={p:.2f};bitrate={b:.3f}")
+        for label, cf in (("sflz", {}), ("neurlz", {target: (aux,)})):
+            sub = {target: flds[target]}
+            if cf:
+                sub[aux] = flds[aux]
+            for eb in bounds:
+                t0 = time.time()
+                _, _, out, _ = common.run_neurlz(
+                    sub, eb, compressor=comp, mode="strict", epochs=epochs,
+                    cross_field=cf)
+                r = out[target]
+                common.csv_row(
+                    f"fig10/{comp}/{label}/eb{eb:g}", (time.time() - t0) * 1e6,
+                    f"psnr={r['psnr']:.2f};bitrate={r['bitrate']:.3f};"
+                    f"bitrate_amortized={r['bitrate_amortized']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Fig 13 / §5.1: strict vs relaxed vs unregulated quality and the
+outlier-storage trade-off (does doubling the bound pay for itself?)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from . import common
+from repro.core import metrics
+from repro.data import fields as F
+
+
+def run(full: bool = False):
+    shape = (32, 48, 48) if full else (24, 40, 40)
+    epochs = 30 if full else 20
+    flds = F.make_fields("nyx", shape=shape, seed=2)
+    x = flds["temperature"]
+    for mode in ("strict", "relaxed", "unregulated"):
+        t0 = time.time()
+        arc, dec, out, _ = common.run_neurlz({"f": x}, 1e-3, mode=mode,
+                                             epochs=epochs)
+        r = out["f"]
+        d = dec["f"]
+        common.csv_row(
+            f"fig13/{mode}", (time.time() - t0) * 1e6,
+            f"psnr={r['psnr']:.2f};mae={r['mae']:.3e};"
+            f"dssim={metrics.dssim(x, d):.5f};"
+            f"bitrate={r['bitrate']:.3f};"
+            f"maxerr_over_eb={r['max_err_over_eb']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Roofline report: reads experiments/dryrun/*.json into the
+(arch x shape x mesh) table used by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from . import common
+
+
+def load_records(out_dir="experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(full: bool = False):
+    recs = load_records()
+    if not recs:
+        common.csv_row("roofline/none", 0.0, "no dryrun records found")
+        return
+    for r in recs:
+        if r.get("status") != "ok":
+            common.csv_row(f"roofline/{r['arch']}/{r.get('shape')}", 0.0,
+                           f"status=FAIL;err={r.get('error', '?')[:60]}")
+            continue
+        t = r["roofline"]
+        mesh = "x".join(str(v) for v in r["mesh"].values())
+        ucr = r.get("useful_compute_ratio")
+        common.csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/mesh{mesh}", 0.0,
+            f"dominant={t['dominant']};compute_ms={t['compute_s']*1e3:.2f};"
+            f"memory_ms={t['memory_s']*1e3:.2f};"
+            f"collective_ms={t['collective_s']*1e3:.2f};"
+            f"peak_hbm_gib={r['memory']['peak_hbm_bytes']/2**30:.2f};"
+            f"useful_compute_ratio={ucr if ucr is None else round(ucr, 3)}")
+
+
+if __name__ == "__main__":
+    run()

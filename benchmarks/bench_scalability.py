@@ -1,0 +1,42 @@
+"""Paper Table 3: rate reduction and train/comp time ratios across block
+sizes and training epochs (the scalability story)."""
+from __future__ import annotations
+
+import time
+
+from . import common
+from repro import compressors as C
+from repro.core import metrics
+from repro.data import fields as F
+
+
+def run(full: bool = False):
+    sizes = [(16, 32, 32), (24, 40, 40), (32, 48, 48)]
+    if full:
+        sizes = [(32, 64, 64), (64, 64, 64), (64, 128, 128)]
+    epoch_grid = [1, 5, 20] if not full else [1, 2, 5, 10]
+    for shape in sizes:
+        flds = F.make_fields("nyx", shape=shape, seed=2)
+        x = flds["dark_matter_density"]
+        C.compress(x, 1e-2, compressor="szlike")   # jit warmup
+        t0 = time.time()
+        arc_conv, _ = C.compress(x, 1e-2, compressor="szlike")
+        conv_s = time.time() - t0
+        curve = common.rd_curve(x, "szlike", [3e-2, 1e-2, 3e-3, 1e-3])
+        for epochs in epoch_grid:
+            t0 = time.time()
+            arc, dec, out, t = common.run_neurlz({"f": x}, 1e-2,
+                                                 mode="strict", epochs=epochs)
+            r = out["f"]
+            conv_eq = common.equal_psnr_bitrate(curve, r["psnr"])
+            red = 100.0 * (1.0 - r["bitrate_amortized"] / conv_eq)
+            common.csv_row(
+                f"table3/size{shape[0]}x{shape[1]}x{shape[2]}/ep{epochs}",
+                (time.time() - t0) * 1e6,
+                f"rate_reduction_amortized_pct={red:.1f};"
+                f"train_over_comp_pct={100 * arc['timing']['train_s'] / max(conv_s, 1e-9):.0f};"
+                f"dec_s={t['decompress_s']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

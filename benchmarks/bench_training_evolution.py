@@ -1,0 +1,50 @@
+"""Paper Figs 7/12/16: per-epoch evolution of PSNR, outlier rate (OLR) and
+max-abs-error for regulated vs unregulated training."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from . import common
+from repro import compressors as C
+from repro.core import metrics, online_trainer, regulation, skipping_dnn
+from repro.data import fields as F
+
+
+def run(full: bool = False):
+    shape = (32, 48, 48) if full else (24, 40, 40)
+    n_epochs = 24 if full else 12
+    flds = F.make_fields("nyx", shape=shape, seed=2)
+    for name in ("temperature", "velocity_y"):
+        x = flds[name]
+        arc, rec = C.compress(x, 1e-3, compressor="szlike")
+        eb = arc["abs_eb"]
+        for regulated in (True, False):
+            net_cfg = skipping_dnn.SkippingDNNConfig(c_in=1, regulated=regulated)
+            tcfg = online_trainer.TrainConfig(epochs=n_epochs, batch=10)
+            inputs, targets, stats = online_trainer.make_dataset(rec, x, eb)
+            params = skipping_dnn.init_params(jax.random.PRNGKey(0), net_cfg)
+            opt = None
+            t0 = time.time()
+            for epoch in range(n_epochs):
+                params, opt, hist = online_trainer.train(
+                    params, inputs, targets, tcfg, net_cfg, opt_state=opt,
+                    start_epoch=epoch, epochs=1)
+                resid = online_trainer.predict_residual(params, inputs, net_cfg)
+                resid = np.moveaxis(resid, 0, 0)
+                enh = regulation.enhance(rec, resid, eb)
+                err = np.abs(enh.astype(np.float64) - x.astype(np.float64))
+                psnr = metrics.psnr(x, enh)
+                olr = float((err > eb).mean() * 100)
+                tag = "regulated" if regulated else "unregulated"
+                common.csv_row(
+                    f"fig12/{name}/{tag}/epoch{epoch + 1}",
+                    (time.time() - t0) * 1e6,
+                    f"psnr={psnr:.2f};olr_pct={olr:.3f};"
+                    f"maxerr_over_eb={err.max() / eb:.3f}")
+
+
+if __name__ == "__main__":
+    run()

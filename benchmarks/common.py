@@ -1,0 +1,76 @@
+"""Shared benchmark plumbing: NeurLZ-vs-conventional runs, rate-distortion
+interpolation (the paper's 'bit-rate reduction at equal PSNR'), CSV output.
+
+Default scales are CPU-sized (small blocks, few epochs); pass ``--full`` to
+``benchmarks.run`` for paper-scale settings.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import compressors as C
+from repro import core
+from repro.core import metrics
+from repro.data import fields as F
+
+
+def rd_curve(x, compressor: str, bounds) -> list[tuple[float, float]]:
+    """Conventional rate-distortion curve: [(psnr, bitrate bits/val)]."""
+    pts = []
+    for eb in bounds:
+        arc, _ = C.compress(x, eb, compressor=compressor)
+        dec = C.decompress(arc)
+        pts.append((metrics.psnr(x, dec), 8.0 * arc["nbytes"] / x.size))
+    return sorted(pts)
+
+
+def equal_psnr_bitrate(curve, psnr: float) -> float:
+    """Conventional bitrate needed to reach ``psnr`` (log-rate interp)."""
+    ps = np.array([p for p, _ in curve])
+    bs = np.array([b for _, b in curve])
+    return float(np.exp(np.interp(psnr, ps, np.log(bs))))
+
+
+def run_neurlz(fields_dict, rel_eb, *, compressor="szlike", mode="strict",
+               epochs=5, cross_field=None, **kw):
+    cfg = core.NeurLZConfig(compressor=compressor, mode=mode, epochs=epochs,
+                            cross_field=cross_field or {}, **kw)
+    t0 = time.time()
+    arc = core.compress(fields_dict, rel_eb=rel_eb, config=cfg)
+    t_comp = time.time() - t0
+    t1 = time.time()
+    dec = core.decompress(arc)
+    t_dec = time.time() - t1
+    out = {}
+    for name, x in fields_dict.items():
+        br = arc["bitrate"][name]
+        # Paper accounting: the enhancer weights amortize over the paper's
+        # 512^3 runtime blocks; on CPU-sized test blocks we report both the
+        # full-weight bitrate (honest at this block size) and the amortized
+        # one (the paper's operating point).
+        amort = 8.0 * (br["conv_bytes"] + br["outlier_bytes"]
+                       + br["weight_bytes"] * x.size / 512**3) / x.size
+        out[name] = {
+            "psnr": metrics.psnr(x, dec[name]),
+            "mae": metrics.mae(x, dec[name]),
+            "bitrate": arc["bitrate"][name]["bitrate"],
+            "bitrate_amortized": amort,
+            "conv_bitrate": arc["bitrate"][name]["conv_bitrate"],
+            "max_err_over_eb": float(
+                np.abs(dec[name].astype(np.float64)
+                       - x.astype(np.float64)).max()
+                / arc["fields"][name]["abs_eb"]),
+            "olr_bits": arc["fields"][name].get("outliers", {}).get(
+                "packed_bits", 0),
+        }
+    return arc, dec, out, {"compress_s": t_comp, "decompress_s": t_dec}
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def bench_fields(dataset="nyx", shape=(32, 48, 48), seed=2):
+    return F.make_fields(dataset, shape=shape, seed=seed)

@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/README of record:
+EXPERIMENTS.md maps each prefix to the paper table/figure it reproduces).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_error_validation",   # Fig 11 / Fig 5
+    "bench_rate_psnr",          # Fig 10
+    "bench_bitrate_reduction",  # Table 2
+    "bench_scalability",        # Table 3
+    "bench_ablations",          # Fig 4
+    "bench_training_evolution", # Figs 7/12/16
+    "bench_regulation",         # Fig 13 / §5.1
+    "bench_conflict",           # Fig 17 / §5.3
+    "bench_grad_compress",      # framework integration (DESIGN.md §4)
+    "bench_kernels",            # Pallas kernel validation
+    "bench_roofline",           # §Roofline table from dry-run records
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow)")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark module")
+    args = ap.parse_args()
+
+    failures = 0
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.run(full=args.full)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

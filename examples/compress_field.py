@@ -1,0 +1,69 @@
+"""End-to-end NeurLZ driver (the paper's workload): multi-field block,
+cross-field learning, strict error regulation, archive on disk, full
+validation report.
+
+    PYTHONPATH=src python examples/compress_field.py [--dataset nyx]
+        [--shape 32,48,48] [--eb 1e-3] [--epochs 8] [--mode strict]
+"""
+import argparse
+import os
+import tempfile
+
+import numpy as np
+
+from repro import compressors as C
+from repro import core
+from repro.core import metrics
+from repro.data import fields as F
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="nyx",
+                    choices=["nyx", "miranda", "hurricane"])
+    ap.add_argument("--shape", default="32,48,48")
+    ap.add_argument("--eb", type=float, default=1e-3)
+    ap.add_argument("--epochs", type=int, default=8)
+    ap.add_argument("--mode", default="strict",
+                    choices=["strict", "relaxed", "unregulated"])
+    ap.add_argument("--compressor", default="szlike",
+                    choices=["szlike", "szlike-lorenzo", "zfplike"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    shape = tuple(int(s) for s in args.shape.split(","))
+    flds = F.make_fields(args.dataset, shape=shape, seed=0)
+    cross = F.DEFAULT_CROSS_FIELD[args.dataset]
+
+    cfg = core.NeurLZConfig(compressor=args.compressor, mode=args.mode,
+                            epochs=args.epochs, cross_field=cross)
+    print(f"[compress] {args.dataset} {shape} eb={args.eb} mode={args.mode} "
+          f"epochs={args.epochs} cross_field=on")
+    arc = core.compress(flds, rel_eb=args.eb, config=cfg)
+
+    path = args.out or os.path.join(tempfile.gettempdir(),
+                                    f"{args.dataset}.nlz")
+    nbytes = core.save(path, arc)
+    print(f"[archive]  {path}  ({nbytes/2**20:.2f} MiB on disk)")
+
+    dec = core.decompress(core.load(path))
+    raw = sum(v.nbytes for v in flds.values())
+    total = sum(arc["bitrate"][n]["total_bytes"] for n in flds)
+    print(f"[totals]   raw {raw/2**20:.1f} MiB -> {total/2**20:.2f} MiB "
+          f"(CR {raw/total:.1f}x)")
+    for name, x in flds.items():
+        eb = arc["fields"][name]["abs_eb"]
+        err = np.abs(dec[name].astype(np.float64) - x.astype(np.float64)).max()
+        conv = C.decompress(arc["fields"][name]["conv"])
+        br = arc["bitrate"][name]
+        print(f"  {name:22s} maxerr/eb={err/eb:6.3f}  "
+              f"PSNR {metrics.psnr(x, conv):6.2f} -> {metrics.psnr(x, dec[name]):6.2f} dB  "
+              f"bitrate {br['bitrate']:6.3f} b/val")
+        limit = eb if args.mode == "strict" else (
+            2 * eb if args.mode == "relaxed" else np.inf)
+        assert err <= limit * (1 + 1e-9), "bound violated!"
+    print("[ok] all error bounds verified")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched serving example: prefill a prompt batch, decode new tokens.
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --gen 32
+"""
+import argparse
+from types import SimpleNamespace
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    serve(SimpleNamespace(arch=args.arch, batch=args.batch,
+                          prompt_len=args.prompt_len, gen=args.gen, seed=0))
+
+
+if __name__ == "__main__":
+    main()

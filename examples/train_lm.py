@@ -1,0 +1,33 @@
+"""Train a ~16M-param qwen3-family model for a few hundred steps with the
+full framework: checkpointing (optionally NeurLZ-compressed), resume,
+straggler watchdog.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 200 --lossy-ckpt
+"""
+import argparse
+from types import SimpleNamespace
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_run")
+    ap.add_argument("--lossy-ckpt", action="store_true",
+                    help="NeurLZ error-bounded checkpoint weights (eb=1e-5)")
+    args = ap.parse_args()
+    train(SimpleNamespace(
+        arch=args.arch, preset="reduced", steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=3e-3, seed=0, microbatch=1,
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, keep=3, resume=True,
+        lossy_ckpt_eb=1e-5 if args.lossy_ckpt else None,
+        fail_at_step=None, step_deadline=300.0, log_every=20))
+
+
+if __name__ == "__main__":
+    main()

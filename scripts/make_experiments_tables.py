@@ -1,0 +1,31 @@
+"""Regenerate the EXPERIMENTS.md dry-run/roofline tables from the JSON
+records in experiments/dryrun (run after a dry-run sweep)."""
+import glob
+import json
+import sys
+
+
+def fmt_table(out_dir="experiments/dryrun"):
+    recs = [json.load(open(p)) for p in sorted(glob.glob(f"{out_dir}/*.json"))]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    lines = []
+    lines.append(f"{len(ok)}/{len(recs)} cells compiled OK.\n")
+    lines.append("| arch | shape | mesh | dominant | compute ms | memory ms | "
+                 "collective ms | peak HBM GiB | useful ratio |")
+    lines.append("|---|---|---|---|---:|---:|---:|---:|---:|")
+    for r in sorted(ok, key=lambda r: (r["arch"], str(r.get("shape")),
+                                       len(r["mesh"]))):
+        t = r["roofline"]
+        mesh = "2x16x16" if "pod" in r["mesh"] else "16x16"
+        u = r.get("useful_compute_ratio")
+        lines.append(
+            f"| {r['arch']} | {r.get('shape','-')} | {mesh} | {t['dominant']} "
+            f"| {t['compute_s']*1e3:.1f} | {t['memory_s']*1e3:.1f} "
+            f"| {t['collective_s']*1e3:.1f} "
+            f"| {r['memory']['peak_hbm_bytes']/2**30:.2f} "
+            f"| {('%.3f' % u) if u is not None else '—'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(fmt_table(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"))

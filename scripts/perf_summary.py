@@ -1,0 +1,64 @@
+"""Summarize the §Perf iteration records (experiments/perf + baselines)."""
+import glob
+import json
+
+CELLS = {
+    "A (qwen3-8b train_4k 16x16)": [
+        ("A0 baseline", "experiments/dryrun/qwen3-8b_train_4k_single.json"),
+        ("A1 skip_uncausal [adopted]",
+         "experiments/perf/qwen3-8b_train_4k_single_A1_skipuncausal.json"),
+        ("A2 remat=dots [rejected: HBM]",
+         "experiments/perf/qwen3-8b_train_4k_single_A2_dots.json"),
+        ("A3 seq-shard inputs [refuted]",
+         "experiments/perf/qwen3-8b_train_4k_single_A3_seqshard.json"),
+        ("A4 microbatch=16",
+         "experiments/perf/qwen3-8b_train_4k_single_A4_mb16.json"),
+        ("A5 A1+sp_residual",
+         "experiments/perf/qwen3-8b_train_4k_single_A5_skipunc_sp.json"),
+        ("A6 A5+mb2",
+         "experiments/perf/qwen3-8b_train_4k_single_A6_skipunc_sp_mb2.json"),
+        ("A7 A1+mb2 [rejected: HBM]",
+         "experiments/perf/qwen3-8b_train_4k_single_A7_skipunc_mb2.json"),
+    ],
+    "B (deepseek-moe train_4k 2x16x16)": [
+        ("B0 baseline group=2048",
+         "experiments/dryrun/deepseek-moe-16b_train_4k_multi.json"),
+        ("B1 group=256 [adopted]",
+         "experiments/perf/deepseek-moe-16b_train_4k_multi_B1_group256.json"),
+        ("B2 B1+seq-shard [refuted]",
+         "experiments/perf/deepseek-moe-16b_train_4k_multi_B2_group256_seqshard.json"),
+        ("B3 B1+remat=dots",
+         "experiments/perf/deepseek-moe-16b_train_4k_multi_B3_group256_dots.json"),
+        ("B4 B1+sp_residual",
+         "experiments/perf/deepseek-moe-16b_train_4k_multi_B4_group256_sp.json"),
+    ],
+    "C (neurlz_enhance 16x16)": [
+        ("C0 baseline pjit+vmap",
+         "experiments/dryrun/neurlz_enhance_na_single.json"),
+        ("C1 shard_map [adopted]",
+         "experiments/perf/neurlz_enhance_na_single_C1_shardmap.json"),
+    ],
+}
+
+
+def main():
+    for cell, rows in CELLS.items():
+        print(f"\n## {cell}")
+        print(f"{'iteration':38s} {'comp_ms':>9s} {'mem_ms':>9s} "
+              f"{'coll_ms':>9s} {'HBM_GiB':>8s} {'useful':>7s}")
+        for label, path in rows:
+            try:
+                r = json.load(open(path))
+            except FileNotFoundError:
+                print(f"{label:38s} (missing)")
+                continue
+            t = r["roofline"]
+            u = r.get("useful_compute_ratio")
+            print(f"{label:38s} {t['compute_s']*1e3:9.1f} "
+                  f"{t['memory_s']*1e3:9.1f} {t['collective_s']*1e3:9.1f} "
+                  f"{r['memory']['peak_hbm_bytes']/2**30:8.2f} "
+                  f"{u if u is None else format(u, '.3f'):>7}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""NeurLZ-JAX: neural-enhanced scientific lossy compression (Jia et al.,
+ICS'25) as a first-class feature of a multi-pod JAX training/serving
+framework.
+
+Subpackages (imported lazily — ``repro.core``/``repro.compressors`` enable
+x64 for FP64 datasets; model/launch paths do not):
+    core          the paper's pipeline (enhancer, online training, regulation)
+    compressors   SZ3-style / Lorenzo / ZFP-style error-bounded codecs
+    kernels       Pallas TPU kernels (+ ops/ref)
+    models        the 10 assigned architectures
+    configs       arch configs + shape suites
+    distributed   sharding rules, elastic re-sharding
+    optim         AdamW, schedules, compressed grad sync
+    checkpoint    fault-tolerant checkpointing
+    data          synthetic fields + token pipeline
+    launch        mesh, dryrun, roofline, train, serve
+"""
+__version__ = "1.0.0"

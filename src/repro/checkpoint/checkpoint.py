@@ -1,0 +1,180 @@
+"""Fault-tolerant checkpointing.
+
+Design (for 1000+ node runs):
+  * **atomic** — write to ``step_N.tmp/`` then ``rename``; a crash mid-save
+    never corrupts the latest checkpoint;
+  * **manifest** — ``manifest.json`` lists steps; ``latest_step()`` is what
+    restart reads; retention keeps the newest K;
+  * **self-describing** — params/opt-state stored as a flat {path: array}
+    msgpack+zstd blob with dtype/shape, so a checkpoint written on one mesh
+    restores onto ANY other mesh (elastic re-sharding = load + device_put
+    with the new sharding — see ``repro.distributed.elastic``);
+  * **NeurLZ-compressed mode** — the paper's technique applied to the
+    framework's own state: weights go through the error-bounded pipeline
+    (strict 1× bound on every weight), cutting checkpoint bytes by ~2–4×
+    at eb=1e-5 rel; optimizer moments, being noise-like, stay lossless.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _flatten(tree, prefix="", out=None):
+    import jax
+
+    out = {} if out is None else out
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[prefix + key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_into(template, flat, prefix=""):
+    import jax
+    import jax.numpy as jnp
+
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new = []
+    for path, leaf in paths_leaves:
+        key = prefix + "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                for p in path)
+        arr = flat[key]
+        new.append(jnp.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def _pack_arrays(flat: dict, level: int = 3, lossy_eb: float | None = None) -> bytes:
+    entries = {}
+    for k, a in flat.items():
+        a = np.ascontiguousarray(a)
+        if lossy_eb is not None and a.dtype in (np.float32, np.float64) and a.ndim >= 2:
+            # NeurLZ error-bounded weight compression (strict 1x bound).
+            from ..compressors import szlike
+
+            arc, _ = szlike.compress(
+                a if a.ndim in (2, 3) else a.reshape(a.shape[0], -1),
+                rel_eb=lossy_eb,
+                config=szlike.SZLikeConfig(predictor="lorenzo"))
+            entries[k] = {"kind": "szlike", "arc": _arc_to_bytes(arc),
+                          "shape": list(a.shape), "dtype": str(a.dtype)}
+        else:
+            entries[k] = {"kind": "raw", "dtype": str(a.dtype),
+                          "shape": list(a.shape), "data": a.tobytes()}
+    payload = msgpack.packb(entries, use_bin_type=True)
+    return zstd.ZstdCompressor(level=level).compress(payload)
+
+
+def _arc_to_bytes(arc: dict) -> bytes:
+    return msgpack.packb(arc, use_bin_type=True, default=lambda o: o.item()
+                         if hasattr(o, "item") else o)
+
+
+def _unpack_arrays(data: bytes) -> dict:
+    payload = zstd.ZstdDecompressor().decompress(data)
+    entries = msgpack.unpackb(payload, raw=False, strict_map_key=False)
+    out = {}
+    for k, e in entries.items():
+        if e.get("kind", "raw") == "szlike":
+            from ..compressors import szlike
+
+            arc = msgpack.unpackb(e["arc"], raw=False, strict_map_key=False)
+            arr = szlike.decompress(arc)
+            out[k] = arr.reshape(e["shape"]).astype(e["dtype"])
+        else:
+            out[k] = np.frombuffer(e["data"], dtype=e["dtype"]).reshape(e["shape"])
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 lossy_weights_eb: float | None = None):
+        self.dir = directory
+        self.keep = keep
+        self.lossy_eb = lossy_weights_eb
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, params, opt_state=None, extra: dict | None = None):
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        t0 = time.time()
+        with open(os.path.join(tmp, "params.bin"), "wb") as f:
+            f.write(_pack_arrays(_flatten(params), lossy_eb=self.lossy_eb))
+        if opt_state is not None:
+            with open(os.path.join(tmp, "opt.bin"), "wb") as f:
+                f.write(_pack_arrays(_flatten(opt_state)))
+        meta = {"step": int(step), "time": time.time(),
+                "save_seconds": time.time() - t0,
+                "lossy_weights_eb": self.lossy_eb,
+                "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                     # atomic publish
+        self._update_manifest(step)
+        self._retain()
+        return final
+
+    def _update_manifest(self, step: int):
+        man = self.manifest()
+        if step not in man["steps"]:
+            man["steps"].append(int(step))
+            man["steps"].sort()
+        tmp = os.path.join(self.dir, "manifest.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(man, f)
+        os.replace(tmp, os.path.join(self.dir, "manifest.json"))
+
+    def _retain(self):
+        man = self.manifest()
+        while len(man["steps"]) > self.keep:
+            victim = man["steps"].pop(0)
+            path = os.path.join(self.dir, f"step_{victim}")
+            if os.path.exists(path):
+                shutil.rmtree(path)
+        tmp = os.path.join(self.dir, "manifest.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(man, f)
+        os.replace(tmp, os.path.join(self.dir, "manifest.json"))
+
+    # --------------------------------------------------------------- restore
+    def manifest(self) -> dict:
+        path = os.path.join(self.dir, "manifest.json")
+        if not os.path.exists(path):
+            return {"steps": []}
+        with open(path) as f:
+            return json.load(f)
+
+    def latest_step(self) -> int | None:
+        steps = self.manifest()["steps"]
+        # tolerate a manifest entry whose directory was lost (partial node
+        # failure): fall back to the newest complete checkpoint
+        for s in sorted(steps, reverse=True):
+            if os.path.exists(os.path.join(self.dir, f"step_{s}", "meta.json")):
+                return s
+        return None
+
+    def restore(self, step: int, params_template, opt_template=None):
+        base = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(base, "params.bin"), "rb") as f:
+            params = _unflatten_into(params_template, _unpack_arrays(f.read()))
+        opt = None
+        if opt_template is not None:
+            with open(os.path.join(base, "opt.bin"), "rb") as f:
+                opt = _unflatten_into(opt_template, _unpack_arrays(f.read()))
+        with open(os.path.join(base, "meta.json")) as f:
+            meta = json.load(f)
+        return params, opt, meta

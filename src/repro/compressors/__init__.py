@@ -1,0 +1,38 @@
+"""Conventional error-bounded lossy compressors (the substrate NeurLZ enhances).
+
+FP64 scientific data (Miranda) needs double-precision reconstruction, so the
+compression stack runs with x64 enabled.  Model code always passes explicit
+dtypes and is unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from . import entropy, outliers, szlike, zfplike  # noqa: E402,F401
+from .quantize import abs_bound_from_rel  # noqa: E402,F401
+
+
+def compress(x, rel_eb=None, *, abs_eb=None, compressor="szlike", **kw):
+    """Dispatch helper: ``compressor`` in {szlike, szlike-lorenzo, zfplike}."""
+    if compressor == "szlike":
+        return szlike.compress(x, rel_eb, abs_eb=abs_eb, **kw)
+    if compressor == "szlike-lorenzo":
+        cfg = kw.pop("config", szlike.SZLikeConfig(predictor="lorenzo"))
+        return szlike.compress(x, rel_eb, abs_eb=abs_eb, config=cfg, **kw)
+    if compressor == "zfplike":
+        return zfplike.compress(x, rel_eb, abs_eb=abs_eb, **kw)
+    raise ValueError(f"unknown compressor {compressor!r}")
+
+
+def decompress(arc: dict):
+    if arc["kind"] == "szlike":
+        return szlike.decompress(arc)
+    if arc["kind"] == "zfplike":
+        return zfplike.decompress(arc)
+    raise ValueError(f"unknown archive kind {arc['kind']!r}")
+
+
+def archive_nbytes(arc: dict) -> int:
+    if arc["kind"] == "szlike":
+        return szlike.archive_nbytes(arc)
+    return zfplike.archive_nbytes(arc)

@@ -1,0 +1,76 @@
+"""Host-side entropy stage.
+
+TPU adaptation note (DESIGN.md §3): the device produces dense int32 quantization
+codes; byte-granular entropy coding is pointer-chasing control flow that maps
+poorly onto the MXU/VPU, so it runs on the host — the same split cuSZ uses
+(GPU dual-quant + host/GPU Huffman).  We use zstd (level tunable) over the
+narrowest integer representation of the code stream, which on near-zero
+residual codes behaves like the Huffman+lossless stage of SZ3.
+
+Also provides a first-order-entropy estimator used by the benchmarks to report
+the idealized rate alongside the *real achieved* zstd bytes.
+"""
+from __future__ import annotations
+
+import numpy as np
+import zstandard as zstd
+
+_ZSTD_LEVEL = 9
+
+
+def _narrow(codes: np.ndarray) -> tuple[np.ndarray, str]:
+    """Pick the narrowest int dtype that losslessly holds ``codes``."""
+    if codes.size == 0:
+        return codes.astype(np.int8), "int8"
+    lo, hi = int(codes.min()), int(codes.max())
+    for dt in ("int8", "int16", "int32", "int64"):
+        info = np.iinfo(dt)
+        if info.min <= lo and hi <= info.max:
+            return codes.astype(dt), dt
+    raise ValueError("codes exceed int64 range")
+
+
+def encode_codes(codes: np.ndarray, level: int = _ZSTD_LEVEL) -> dict:
+    """Entropy-encode an integer code stream.  Returns a serializable blob."""
+    codes = np.ascontiguousarray(np.asarray(codes))
+    narrow, dt = _narrow(codes.ravel())
+    payload = zstd.ZstdCompressor(level=level).compress(narrow.tobytes())
+    return {
+        "dtype": dt,
+        "shape": list(codes.shape),
+        "payload": payload,
+        "nbytes": len(payload),
+    }
+
+
+def decode_codes(blob: dict) -> np.ndarray:
+    raw = zstd.ZstdDecompressor().decompress(blob["payload"])
+    arr = np.frombuffer(raw, dtype=blob["dtype"]).reshape(blob["shape"])
+    return arr.astype(np.int32)
+
+
+def encode_floats(values: np.ndarray, level: int = _ZSTD_LEVEL) -> dict:
+    """Lossless float blob (literals, DNN weights)."""
+    values = np.ascontiguousarray(np.asarray(values))
+    payload = zstd.ZstdCompressor(level=level).compress(values.tobytes())
+    return {
+        "dtype": str(values.dtype),
+        "shape": list(values.shape),
+        "payload": payload,
+        "nbytes": len(payload),
+    }
+
+
+def decode_floats(blob: dict) -> np.ndarray:
+    raw = zstd.ZstdDecompressor().decompress(blob["payload"])
+    return np.frombuffer(raw, dtype=blob["dtype"]).reshape(blob["shape"]).copy()
+
+
+def first_order_entropy_bits(codes: np.ndarray) -> float:
+    """Idealized total bits for the code stream under an order-0 model."""
+    codes = np.asarray(codes).ravel()
+    if codes.size == 0:
+        return 0.0
+    _, counts = np.unique(codes, return_counts=True)
+    p = counts / codes.size
+    return float(-(p * np.log2(p)).sum() * codes.size)

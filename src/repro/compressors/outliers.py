@@ -1,0 +1,70 @@
+"""Bit-packed outlier coordinate codec (paper §3.3.1).
+
+The paper stores, per outlier, the N-D coordinate using
+``B̄ = Σ_i log2(dim_i)`` bits — i.e. the flat index in ``ceil(log2(Π dim_i))``
+bits.  We pack flat indices at exactly that width (so the benchmark bitrate
+accounting matches the paper's formula), delta-encoding sorted indices first
+and letting zstd squeeze the packed stream further — a strictly-better rate
+than the paper assumes, reported separately as ``packed_bits`` (paper formula)
+vs ``nbytes`` (achieved).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import zstandard as zstd
+
+
+def coord_bits(shape: tuple[int, ...]) -> int:
+    """``B̄`` from the paper: bits to address one point of ``shape``."""
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return max(1, math.ceil(math.log2(max(n, 2))))
+
+
+def _pack_bits(values: np.ndarray, width: int) -> bytes:
+    """Pack ``values`` (uint64) at ``width`` bits each, little-endian bit order."""
+    if values.size == 0:
+        return b""
+    bits = ((values[:, None] >> np.arange(width, dtype=np.uint64)) & 1).astype(np.uint8)
+    return np.packbits(bits.ravel(), bitorder="little").tobytes()
+
+
+def _unpack_bits(data: bytes, width: int, count: int) -> np.ndarray:
+    if count == 0:
+        return np.zeros((0,), dtype=np.uint64)
+    bits = np.unpackbits(np.frombuffer(data, dtype=np.uint8), bitorder="little")
+    bits = bits[: count * width].reshape(count, width).astype(np.uint64)
+    return (bits << np.arange(width, dtype=np.uint64)).sum(axis=1)
+
+
+def encode_outliers(mask: np.ndarray) -> dict:
+    """Encode the True positions of a boolean mask."""
+    shape = tuple(int(s) for s in mask.shape)
+    flat = np.flatnonzero(np.asarray(mask).ravel()).astype(np.uint64)
+    width = coord_bits(shape)
+    # Delta encoding of sorted indices keeps the packed stream zstd-friendly.
+    deltas = np.diff(flat, prepend=np.uint64(0)) if flat.size else flat
+    packed = _pack_bits(deltas, width)
+    payload = zstd.ZstdCompressor(level=9).compress(packed)
+    return {
+        "shape": list(shape),
+        "count": int(flat.size),
+        "width": width,
+        "payload": payload,
+        # Paper-formula storage cost (bits): count * B̄.
+        "packed_bits": int(flat.size) * width,
+        "nbytes": len(payload),
+    }
+
+
+def decode_outliers(blob: dict) -> np.ndarray:
+    shape = tuple(blob["shape"])
+    packed = zstd.ZstdDecompressor().decompress(blob["payload"])
+    deltas = _unpack_bits(packed, blob["width"], blob["count"])
+    flat = np.cumsum(deltas, dtype=np.uint64)
+    mask = np.zeros(int(np.prod(shape)), dtype=bool)
+    mask[flat.astype(np.int64)] = True
+    return mask.reshape(shape)

@@ -1,0 +1,83 @@
+"""Error-bounded linear quantization primitives.
+
+The contract shared by every compressor in this package:
+
+    code = round((value - pred) / (2 * eb))            (int32)
+    rec  = pred + code * (2 * eb)
+
+which guarantees |rec - value| <= eb whenever |code| < CODE_CAP.  Points whose
+code magnitude reaches CODE_CAP are *unpredictable*: the caller must store the
+literal value and reconstruct it exactly (error 0).
+
+Everything here is pure jnp so it can be jitted, vmapped and shard_mapped; the
+Pallas kernels in ``repro.kernels`` fuse the same math for the hot paths and
+are validated against these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Codes with |q| >= CODE_CAP are escaped to literals.  2^30 leaves headroom in
+# int32 for the Lorenzo delta (sum of 8 codes) without overflow.
+CODE_CAP = 1 << 15
+
+
+def quantize(values: jax.Array, pred: jax.Array, eb: float) -> tuple[jax.Array, jax.Array]:
+    """Quantize ``values`` against ``pred`` with absolute bound ``eb``.
+
+    Returns ``(codes int32, unpredictable bool mask)``.  Where the mask is
+    set the code is forced to 0 and the caller must store a literal.
+    """
+    step = 2.0 * eb
+    q = jnp.round((values - pred) / step)
+    unpred = jnp.abs(q) >= CODE_CAP
+    # NaN/inf inputs are always literals.
+    unpred = unpred | ~jnp.isfinite(values)
+    codes = jnp.where(unpred, 0, q).astype(jnp.int32)
+    return codes, unpred
+
+
+def dequantize(codes: jax.Array, pred: jax.Array, eb: float) -> jax.Array:
+    """Inverse of :func:`quantize` (literal positions must be patched after)."""
+    step = jnp.asarray(2.0 * eb, dtype=pred.dtype)
+    return pred + codes.astype(pred.dtype) * step
+
+
+def quantize_reconstruct(
+    values: jax.Array, pred: jax.Array, eb: float
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused quantize + dequantize returning ``(codes, rec, unpred)``.
+
+    ``rec`` equals the literal value at unpredictable points, so the
+    *compressor-side* reconstruction is exactly what the decompressor will
+    produce after literal patching.  This single code path is what makes the
+    codec deterministic: both sides run identical jnp arithmetic.
+    """
+    codes, unpred = quantize(values, pred, eb)
+    rec = dequantize(codes, pred, eb)
+    rec = jnp.where(unpred, values, rec)
+    return codes, rec, unpred
+
+
+def prequantize(values: jax.Array, eb: float) -> tuple[jax.Array, jax.Array]:
+    """cuSZ-style pre-quantization: snap values onto the ``2*eb`` lattice.
+
+    Returns ``(int32 lattice codes, unpred mask)``.  ``codes * 2eb`` is within
+    ``eb`` of the input wherever ``unpred`` is False.
+    """
+    return quantize(values, jnp.zeros_like(values), eb)
+
+
+def abs_bound_from_rel(x, rel_eb: float) -> float:
+    """Value-range-relative bound -> absolute bound (SZ3 ``-M REL`` semantics)."""
+    import numpy as np
+
+    x = np.asarray(x)
+    finite = x[np.isfinite(x)]
+    if finite.size == 0:
+        return float(rel_eb)
+    vrange = float(finite.max() - finite.min())
+    if vrange == 0.0:
+        vrange = max(abs(float(finite.max())), 1.0)
+    return float(rel_eb) * vrange

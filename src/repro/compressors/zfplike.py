@@ -1,0 +1,217 @@
+"""Transform-based error-bounded lossy compressor (ZFP-style), in JAX.
+
+Pipeline (Lindstrom, TVCG'14, adapted):
+  1. partition the field into 4^d blocks (edge-padded),
+  2. per-block block-floating-point: scale by 2^(P-2-emax) to int32,
+  3. ZFP's exactly-invertible integer lifting transform along each axis,
+  4. quantize coefficients by an arithmetic right-shift of ``b`` bits chosen
+     from the error bound,
+  5. zstd entropy stage over the coefficient planes (coefficient-major layout
+     so same-statistics streams are adjacent),
+  6. a sparse *correction pass*: any point whose reconstruction error would
+     exceed ``eb`` gets an extra error-bounded correction code — this is how
+     we keep ZFP's transform-domain rate while guaranteeing the pointwise
+     bound exactly (ZFP's own fixed-accuracy mode is similarly conservative).
+
+The transform is pure fixed-point slice arithmetic -> fully vectorized jnp
+over all blocks at once (TPU-native: one fused elementwise program instead of
+a per-block loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import entropy
+from .szlike import _encode_mask, _decode_mask
+from .quantize import abs_bound_from_rel
+
+_P = 24  # fixed-point precision bits (int32 with transform headroom)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZFPLikeConfig:
+    zstd_level: int = 9
+    eb_margin: float = 1e-9
+    # Heuristic transform-gain guard when picking the shift width.
+    gain_log2: int = 3
+
+
+# ---------------------------------------------------------------------------
+# ZFP integer lifting transform (exact fwd/inv pair), vectorized over blocks
+# ---------------------------------------------------------------------------
+
+def _fwd_lift(v: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """ZFP fwd_lift along an axis of length 4 (arithmetic shifts, int32)."""
+    a = jnp.moveaxis(v, axis, 0)
+    x, y, z, w = a[0], a[1], a[2], a[3]
+    x = x + w; x = x >> 1; w = w - x
+    z = z + y; z = z >> 1; y = y - z
+    x = x + z; x = x >> 1; z = z - x
+    w = w + y; w = w >> 1; y = y - w
+    w = w + (y >> 1); y = y - (w >> 1)
+    return jnp.moveaxis(jnp.stack([x, y, z, w]), 0, axis)
+
+
+def _inv_lift(v: jnp.ndarray, axis: int) -> jnp.ndarray:
+    a = jnp.moveaxis(v, axis, 0)
+    x, y, z, w = a[0], a[1], a[2], a[3]
+    y = y + (w >> 1); w = w - (y >> 1)
+    y = y + w; w = w << 1; w = w - y
+    z = z + x; x = x << 1; x = x - z
+    y = y + z; z = z << 1; z = z - y
+    w = w + x; x = x << 1; x = x - w
+    return jnp.moveaxis(jnp.stack([x, y, z, w]), 0, axis)
+
+
+def _blockify(x: np.ndarray) -> tuple[np.ndarray, tuple[int, ...], tuple[int, ...]]:
+    """Pad to multiples of 4 and reshape to (nblocks, 4[,4[,4]])."""
+    nd = x.ndim
+    pads = [(0, (-d) % 4) for d in x.shape]
+    xp = np.pad(x, pads, mode="edge")
+    grid = tuple(d // 4 for d in xp.shape)
+    if nd == 2:
+        b = xp.reshape(grid[0], 4, grid[1], 4).transpose(0, 2, 1, 3)
+        blocks = b.reshape(-1, 4, 4)
+    else:
+        b = xp.reshape(grid[0], 4, grid[1], 4, grid[2], 4).transpose(0, 2, 4, 1, 3, 5)
+        blocks = b.reshape(-1, 4, 4, 4)
+    return blocks, xp.shape, grid
+
+
+def _unblockify(blocks: np.ndarray, pad_shape: tuple[int, ...], grid: tuple[int, ...],
+                shape: tuple[int, ...]) -> np.ndarray:
+    nd = len(shape)
+    if nd == 2:
+        b = blocks.reshape(grid[0], grid[1], 4, 4).transpose(0, 2, 1, 3)
+    else:
+        b = blocks.reshape(grid[0], grid[1], grid[2], 4, 4, 4).transpose(0, 3, 1, 4, 2, 5)
+    return b.reshape(pad_shape)[tuple(slice(0, d) for d in shape)]
+
+
+def _transform(blocks_i: jnp.ndarray, inverse: bool) -> jnp.ndarray:
+    nd = blocks_i.ndim - 1
+    axes = range(1, nd + 1)
+    out = blocks_i
+    if inverse:
+        for ax in reversed(list(axes)):
+            out = _inv_lift(out, ax)
+    else:
+        for ax in axes:
+            out = _fwd_lift(out, ax)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def compress(x: np.ndarray, rel_eb: float | None = None, *, abs_eb: float | None = None,
+             config: ZFPLikeConfig = ZFPLikeConfig()) -> tuple[dict, np.ndarray]:
+    x = np.asarray(x)
+    if x.ndim not in (2, 3):
+        raise ValueError(f"expected 2-D or 3-D field, got shape {x.shape}")
+    orig_dtype = x.dtype
+    if abs_eb is None:
+        if rel_eb is None:
+            raise ValueError("pass rel_eb or abs_eb")
+        abs_eb = abs_bound_from_rel(x, rel_eb)
+    eb = float(abs_eb) * (1.0 - config.eb_margin)
+
+    work = np.nan_to_num(x.astype(np.float64), nan=0.0, posinf=0.0, neginf=0.0)
+    nonfinite = ~np.isfinite(x.astype(np.float64))
+    blocks, pad_shape, grid = _blockify(work)
+    nb = blocks.shape[0]
+    bdims = blocks.shape[1:]
+
+    # Block floating point.
+    amax = np.abs(blocks.reshape(nb, -1)).max(axis=1)
+    emax = np.where(amax > 0, np.ceil(np.log2(np.maximum(amax, 1e-300))), -126).astype(np.int32)
+    scale = np.exp2((_P - 2) - emax.astype(np.float64))
+    bshape = (nb,) + (1,) * len(bdims)
+    ints = np.clip(np.round(blocks * scale.reshape(bshape)), -(2**30), 2**30 - 1).astype(np.int32)
+
+    coeff = np.asarray(_transform(jnp.asarray(ints), inverse=False))
+
+    # Shift width from the bound: one ulp of the shifted coefficient maps to
+    # ~2^(b+gain) / scale in value space; keep that below eb.
+    with np.errstate(divide="ignore"):
+        b_f = np.floor(np.log2(np.maximum(eb * scale, 1e-300))) - config.gain_log2
+    bshift = np.clip(b_f, 0, 30).astype(np.int32)
+    coeff_q = coeff >> bshift.reshape(bshape)
+
+    # --- reconstruction (shared with decompress) ---
+    rec = _reconstruct(coeff_q, bshift, emax, grid, pad_shape, tuple(work.shape), bdims)
+
+    # Correction pass: enforce the pointwise bound exactly.
+    err = work - rec
+    need = np.abs(err) > eb
+    corr_codes = np.round(err[need] / (2.0 * eb)).astype(np.int32)
+    rec[need] = rec[need] + corr_codes * (2.0 * eb)
+    # Literal escapes: non-finite points plus any point the output-dtype cast
+    # would push past the bound (exactness for fp32 fields).
+    cast_bad = np.abs(rec.astype(orig_dtype).astype(np.float64) - work) > eb
+    lit_mask = nonfinite | cast_bad
+    rec[lit_mask] = x.astype(np.float64)[lit_mask]
+
+    arc = {
+        "kind": "zfplike",
+        "shape": list(work.shape), "pad_shape": list(pad_shape), "grid": list(grid),
+        "dtype": str(orig_dtype), "abs_eb": float(abs_eb), "eb_int": eb,
+        "emax": entropy.encode_codes(emax, config.zstd_level),
+        "bshift": entropy.encode_codes(bshift, config.zstd_level),
+        # Coefficient-major layout: same coefficient across blocks is adjacent.
+        "coeff": entropy.encode_codes(
+            np.moveaxis(coeff_q, 0, -1).reshape(-1, nb), config.zstd_level),
+        "corr_mask": _encode_mask(need.ravel(), config.zstd_level),
+        "corr_codes": entropy.encode_codes(corr_codes, config.zstd_level),
+        "lit_mask": _encode_mask(lit_mask.ravel(), config.zstd_level),
+        "lit_vals": entropy.encode_floats(
+            np.asarray(x, dtype=np.float64)[lit_mask], config.zstd_level),
+    }
+    arc["nbytes"] = archive_nbytes(arc)
+    return arc, rec.astype(orig_dtype, copy=False)
+
+
+def _reconstruct(coeff_q, bshift, emax, grid, pad_shape, shape, bdims):
+    nb = coeff_q.shape[0]
+    bshape = (nb,) + (1,) * len(bdims)
+    coeff_dq = coeff_q << bshift.reshape(bshape)
+    ints_rec = np.asarray(_transform(jnp.asarray(coeff_dq), inverse=True))
+    scale = np.exp2((_P - 2) - emax.astype(np.float64))
+    blocks_rec = ints_rec.astype(np.float64) / scale.reshape(bshape)
+    return _unblockify(blocks_rec, tuple(pad_shape), tuple(grid), tuple(shape))
+
+
+def decompress(arc: dict) -> np.ndarray:
+    if arc["kind"] != "zfplike":
+        raise ValueError("not a zfplike archive")
+    shape = tuple(arc["shape"])
+    grid = tuple(arc["grid"])
+    nb = int(np.prod(grid))
+    nd = len(shape)
+    bdims = (4,) * nd
+    emax = entropy.decode_codes(arc["emax"]).ravel()
+    bshift = entropy.decode_codes(arc["bshift"]).ravel()
+    coeff_q = np.moveaxis(
+        entropy.decode_codes(arc["coeff"]).reshape(bdims + (nb,)), -1, 0)
+    rec = _reconstruct(coeff_q, bshift, emax, grid, arc["pad_shape"], shape, bdims)
+
+    need = _decode_mask(arc["corr_mask"]).reshape(shape)
+    corr = entropy.decode_codes(arc["corr_codes"]).ravel()
+    rec[need] = rec[need] + corr * (2.0 * arc["eb_int"])
+    nfm = _decode_mask(arc["lit_mask"]).reshape(shape)
+    if nfm.any():
+        rec[nfm] = entropy.decode_floats(arc["lit_vals"]).ravel()
+    return rec.astype(np.dtype(arc["dtype"]), copy=False)
+
+
+def archive_nbytes(arc: dict) -> int:
+    n = 64
+    for key in ("emax", "bshift", "coeff", "corr_mask", "corr_codes",
+                "lit_mask", "lit_vals"):
+        if key in arc:
+            n += arc[key]["nbytes"] + 16
+    return n

@@ -1,0 +1,15 @@
+"""NeurLZ core — the paper's primary contribution as a composable JAX module.
+
+Public API:
+    NeurLZConfig, compress, decompress  — the enhancer pipeline
+    skipping_dnn                        — the ~3k-param enhancer network
+    online_trainer                      — compression-time learning loop
+    regulation                          — 1×/2× error-bound modes
+    metrics                             — PSNR/MAE/DSSIM/bitrate/OLR
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)  # FP64 datasets (Miranda)
+
+from . import archive, metrics, online_trainer, regulation, skipping_dnn  # noqa: E402,F401
+from .neurlz import NeurLZConfig, compress, decompress, field_bitrate, load, save  # noqa: E402,F401

@@ -1,0 +1,90 @@
+"""NeurLZ archive serialization (paper Fig. 2 bottom: file format).
+
+Layout per field: conventional compressed payload ‖ enhancer weights
+(dataset-precision floats, zstd'd) ‖ outlier coordinates (strict mode) ‖
+normalization stats + header.  msgpack binary container, numpy arrays as
+typed blobs.  ``nbytes`` accounting matches what lands on disk.
+"""
+from __future__ import annotations
+
+import io
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _default(obj):
+    if isinstance(obj, np.ndarray):
+        return {b"__nd__": True, b"dtype": str(obj.dtype), b"shape": list(obj.shape),
+                b"data": obj.tobytes()}
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    raise TypeError(f"cannot serialize {type(obj)}")
+
+
+def _hook(obj):
+    if b"__nd__" in obj:
+        return np.frombuffer(obj[b"data"], dtype=obj[b"dtype"]).reshape(obj[b"shape"]).copy()
+    return obj
+
+
+def dumps(obj) -> bytes:
+    return msgpack.packb(obj, default=_default, use_bin_type=True)
+
+
+def loads(data: bytes):
+    return msgpack.unpackb(data, object_hook=_hook, raw=False, strict_map_key=False)
+
+
+def save(path: str, obj) -> int:
+    data = dumps(obj)
+    with open(path, "wb") as f:
+        f.write(data)
+    return len(data)
+
+
+def load(path: str):
+    with open(path, "rb") as f:
+        return loads(f.read())
+
+
+def pack_weights(params_tree, dtype: str = "float32") -> dict:
+    """Flatten an enhancer param tree into one zstd blob (archive payload)."""
+    import jax
+
+    leaves, treedef = jax.tree.flatten(params_tree)
+    arrs = [np.asarray(l, dtype=dtype) for l in leaves]
+    buf = io.BytesIO()
+    for a in arrs:
+        buf.write(a.tobytes())
+    payload = zstd.ZstdCompressor(level=9).compress(buf.getvalue())
+    return {
+        "dtype": dtype,
+        "shapes": [list(a.shape) for a in arrs],
+        "payload": payload,
+        "nbytes": len(payload),
+        "raw_nbytes": sum(a.nbytes for a in arrs),
+        "n_params": sum(a.size for a in arrs),
+    }
+
+
+def unpack_weights(blob: dict, params_like) -> object:
+    """Inverse of :func:`pack_weights`, restored into ``params_like`` tree."""
+    import jax
+    import jax.numpy as jnp
+
+    raw = zstd.ZstdDecompressor().decompress(blob["payload"])
+    leaves, treedef = jax.tree.flatten(params_like)
+    out, off = [], 0
+    dt = np.dtype(blob["dtype"])
+    for leaf, shape in zip(leaves, blob["shapes"]):
+        n = int(np.prod(shape)) * dt.itemsize
+        arr = np.frombuffer(raw[off:off + n], dtype=dt).reshape(shape)
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)

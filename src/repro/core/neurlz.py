@@ -1,0 +1,212 @@
+"""NeurLZ — the paper's contribution, end to end (§3.1, Fig. 3).
+
+Compression:
+  1. conventional error-bounded compression of every field (SZ3-like or
+     ZFP-like), keeping the encoder-side reconstruction,
+  2. per-field *online* training of a skipping-DNN enhancer on the residual
+     ``X − X'`` (cross-field channels optional),
+  3. error regulation: strict (store outlier coordinates) or relaxed
+     (regulated 2× bound, nothing stored) or unregulated (ablation),
+  4. package conventional payload + DNN weights + outliers into one archive.
+
+Decompression mirrors it: conventional decode → enhancer inference →
+``X̂ = X' + R̂`` → outlier patch.  All decoder inputs (normalization stats,
+weights) come from the archive, and the conventional reconstruction is
+bit-identical on both sides, so decode reproduces the encoder's enhanced
+field exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping
+
+import jax
+import numpy as np
+
+from .. import compressors
+from ..compressors import outliers as outlier_codec
+from ..compressors import szlike, zfplike
+from . import archive as arc_io
+from . import metrics, online_trainer, regulation, skipping_dnn
+
+
+@dataclasses.dataclass(frozen=True)
+class NeurLZConfig:
+    compressor: str = "szlike"          # szlike | szlike-lorenzo | zfplike
+    mode: str = "strict"                # strict | relaxed | unregulated
+    epochs: int = 100
+    batch: int = 10
+    lr: float = 1e-2
+    seed: int = 0
+    slice_axis: int = 0
+    skip: bool = True                   # skipping vs plain DNN (ablation)
+    learn_residual: bool = True         # residual vs direct learning (ablation)
+    cross_field: Mapping[str, tuple] = dataclasses.field(default_factory=dict)
+    weight_dtype: str = "float32"       # archive precision for DNN weights
+    widths: tuple = (4, 4, 6, 6, 8)
+
+    def net_config(self, c_in: int) -> skipping_dnn.SkippingDNNConfig:
+        return skipping_dnn.SkippingDNNConfig(
+            c_in=c_in, widths=self.widths,
+            regulated=(self.mode != "unregulated"), skip=self.skip)
+
+    def train_config(self) -> online_trainer.TrainConfig:
+        return online_trainer.TrainConfig(
+            epochs=self.epochs, batch=self.batch, lr=self.lr, seed=self.seed,
+            slice_axis=self.slice_axis)
+
+
+def _aux_names(cfg: NeurLZConfig, name: str, fields) -> list[str]:
+    aux = list(cfg.cross_field.get(name, ()))
+    missing = [a for a in aux if a not in fields]
+    if missing:
+        raise KeyError(f"cross-field aux {missing} not in input fields")
+    return aux
+
+
+def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
+             abs_eb: float | None = None, config: NeurLZConfig = NeurLZConfig(),
+             collect_stats: bool = True) -> dict:
+    """Compress a dict of same-shaped fields into a NeurLZ archive dict."""
+    t0 = time.time()
+    conv_arcs, recs, ebs = {}, {}, {}
+    conv_time = 0.0
+    for name, x in fields.items():
+        tc = time.time()
+        arc, rec = compressors.compress(np.asarray(x), rel_eb, abs_eb=abs_eb,
+                                        compressor=config.compressor)
+        conv_time += time.time() - tc
+        conv_arcs[name], recs[name], ebs[name] = arc, rec, arc["abs_eb"]
+
+    out_fields = {}
+    train_time = 0.0
+    for name, x in fields.items():
+        x = np.asarray(x)
+        eb = ebs[name]
+        aux = [recs[a] for a in _aux_names(config, name, fields)]
+        c_in = 1 + len(aux)
+        net_cfg = config.net_config(c_in)
+        tcfg = config.train_config()
+
+        inputs, targets, stats = online_trainer.make_dataset(
+            recs[name], x, eb, aux=aux, slice_axis=config.slice_axis)
+        if not config.learn_residual:
+            # Ablation: learn the normalized original directly (paper Fig. 4
+            # "non-residual"), scaled by the decomp std so magnitudes match.
+            mu, sd = stats[0]
+            o = np.moveaxis(np.asarray(x, np.float64), config.slice_axis, 0)
+            targets = (((o - mu) / sd).astype(np.float32))[..., None]
+
+        key = jax.random.PRNGKey(tcfg.seed)
+        params = skipping_dnn.init_params(key, net_cfg)
+        tt = time.time()
+        params, _, history = online_trainer.train(params, inputs, targets,
+                                                  tcfg, net_cfg)
+        train_time += time.time() - tt
+
+        resid_norm = online_trainer.predict_residual(params, inputs, net_cfg)
+        resid_norm = np.moveaxis(resid_norm, 0, config.slice_axis)
+        field_rec = _apply_enhancement(
+            recs[name], resid_norm, eb, x.dtype, stats, config)
+
+        entry = {
+            "conv": conv_arcs[name],
+            "weights": arc_io.pack_weights(params, config.weight_dtype),
+            "stats": [list(s) for s in stats],
+            "aux": _aux_names(config, name, fields),
+            "mode": config.mode,
+            "abs_eb": eb,
+            "net": {"c_in": c_in, "widths": list(config.widths),
+                    "regulated": net_cfg.regulated, "skip": net_cfg.skip},
+            "learn_residual": config.learn_residual,
+            "loss_history": history if collect_stats else [],
+        }
+        if config.mode == "strict":
+            mask = regulation.outlier_mask(x, field_rec, eb)
+            entry["outliers"] = outlier_codec.encode_outliers(mask)
+            field_rec = regulation.apply_strict(field_rec, recs[name], mask)
+        out_fields[name] = entry
+
+    arc = {
+        "kind": "neurlz",
+        "fields": out_fields,
+        "slice_axis": config.slice_axis,
+        "compressor": config.compressor,
+        "timing": {"total_s": time.time() - t0, "conv_s": conv_time,
+                   "train_s": train_time},
+    }
+    arc["bitrate"] = {n: field_bitrate(arc, n, int(np.asarray(fields[n]).size))
+                      for n in fields}
+    return arc
+
+
+def _apply_enhancement(rec, resid_norm, eb, out_dtype, stats, config) -> np.ndarray:
+    if config.learn_residual:
+        return regulation.enhance(rec, resid_norm, eb, out_dtype)
+    # Direct-learning ablation: the net predicts the normalized value itself.
+    mu, sd = stats[0]
+    return (resid_norm.astype(np.float64) * sd + mu).astype(out_dtype)
+
+
+def decompress(arc: dict) -> dict[str, np.ndarray]:
+    """Full decode: conventional + enhancer inference + outlier patching."""
+    slice_axis = arc["slice_axis"]
+    recs = {name: compressors.decompress(e["conv"])
+            for name, e in arc["fields"].items()}
+    out = {}
+    for name, e in arc["fields"].items():
+        eb = e["abs_eb"]
+        net = e["net"]
+        net_cfg = skipping_dnn.SkippingDNNConfig(
+            c_in=net["c_in"], widths=tuple(net["widths"]),
+            regulated=net["regulated"], skip=net["skip"])
+        key = jax.random.PRNGKey(0)
+        params = skipping_dnn.init_params(key, net_cfg)
+        params = arc_io.unpack_weights(e["weights"], params)
+
+        aux = [recs[a] for a in e["aux"]]
+        stats = [tuple(s) for s in e["stats"]]
+        inputs, _, _ = online_trainer.make_dataset(
+            recs[name], None, eb, aux=aux, slice_axis=slice_axis, stats=stats)
+        resid_norm = online_trainer.predict_residual(params, inputs, net_cfg)
+        resid_norm = np.moveaxis(resid_norm, 0, slice_axis)
+
+        dtype = np.dtype(e["conv"]["dtype"])
+        cfg = NeurLZConfig(mode=e["mode"], learn_residual=e["learn_residual"])
+        rec = _apply_enhancement(recs[name], resid_norm, eb, dtype, stats, cfg)
+        if e["mode"] == "strict" and "outliers" in e:
+            mask = outlier_codec.decode_outliers(e["outliers"])
+            rec = regulation.apply_strict(rec, recs[name], mask)
+        out[name] = rec
+    return out
+
+
+def field_bitrate(arc: dict, name: str, num_points: int) -> dict:
+    """Paper bit-rate accounting: size(Z) + supplementary, bits/value."""
+    e = arc["fields"][name]
+    conv_b = compressors.archive_nbytes(e["conv"])
+    weight_b = e["weights"]["nbytes"]
+    out_b = 0.0
+    out_bits_paper = 0.0
+    if "outliers" in e:
+        out_b = e["outliers"]["nbytes"]
+        out_bits_paper = e["outliers"]["packed_bits"]
+    total = conv_b + weight_b + out_b
+    return {
+        "conv_bytes": conv_b,
+        "weight_bytes": weight_b,
+        "outlier_bytes": out_b,
+        "outlier_bits_paper_formula": out_bits_paper,
+        "total_bytes": total,
+        "bitrate": metrics.bitrate(total, num_points),
+        "conv_bitrate": metrics.bitrate(conv_b, num_points),
+    }
+
+
+def save(path: str, arc: dict) -> int:
+    return arc_io.save(path, arc)
+
+
+def load(path: str) -> dict:
+    return arc_io.load(path)

@@ -1,0 +1,146 @@
+"""Compression-time online learning of the skipping enhancer (§3.2).
+
+Dataset construction follows the paper exactly: a 3-D block is sliced along
+one axis into single-channel images; the *input* is the normalized
+decompressed slice (plus aux-field channels for cross-field learning) and the
+*target* is the residual ``R = X − X'`` normalized by the error bound — which
+lands in ``[−1, 1]`` by the compressor's bound guarantee, matching the
+regulated Sigmoid head's range (balanced regulation, Fig. 6 Case B).
+
+Normalization statistics are computed from the *decompressed* data only, so
+the decoder can reproduce the identical input tensor without any side
+information.
+
+The whole epoch — shuffle, batch, Adam — runs inside one jitted
+``lax.scan`` so online training costs one dispatch per epoch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim import adamw_init, adamw_update, cosine_schedule
+from . import skipping_dnn
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    epochs: int = 100          # paper default
+    batch: int = 10            # paper default
+    lr: float = 1e-2           # paper default, cosine annealed
+    min_lr_frac: float = 0.0
+    seed: int = 0
+    slice_axis: int = 0
+    loss: str = "mse"          # "mse" | "l1"
+
+
+def normalize_stats(decomp: np.ndarray) -> tuple[float, float]:
+    """Decoder-reproducible normalization constants (decompressed data only)."""
+    d = np.asarray(decomp, dtype=np.float64)
+    mu = float(d.mean())
+    sd = float(d.std())
+    return mu, sd if sd > 1e-30 else 1.0
+
+
+def make_dataset(decomp: np.ndarray, orig: np.ndarray | None, eb: float,
+                 aux: list[np.ndarray] | None = None, slice_axis: int = 0,
+                 stats: list[tuple[float, float]] | None = None):
+    """Slices -> (inputs [N,H,W,C], targets [N,H,W,1] | None, stats).
+
+    ``orig=None`` builds inference inputs only (decoder side).  ``stats``
+    lets the decoder reuse the encoder's stored constants byte-for-byte.
+    """
+    chans = [np.asarray(decomp)] + [np.asarray(a) for a in (aux or [])]
+    if stats is None:
+        stats = [normalize_stats(c) for c in chans]
+    normed = []
+    for c, (mu, sd) in zip(chans, stats):
+        c = np.moveaxis(c.astype(np.float32), slice_axis, 0)
+        normed.append((c - np.float32(mu)) / np.float32(sd))
+    inputs = np.stack(normed, axis=-1)  # [N, H, W, C]
+    targets = None
+    if orig is not None:
+        o = np.moveaxis(np.asarray(orig, dtype=np.float64), slice_axis, 0)
+        d = np.moveaxis(np.asarray(decomp, dtype=np.float64), slice_axis, 0)
+        targets = ((o - d) / eb).astype(np.float32)[..., None]  # in [-1, 1]
+    return inputs, targets, stats
+
+
+@partial(jax.jit, static_argnames=("cfg_reg", "cfg_skip", "batch", "steps",
+                                   "total_steps", "base_lr", "min_lr_frac", "loss"))
+def _train_epoch(params, opt_state, inputs, targets, epoch_key, start_step, *,
+                 cfg_reg, cfg_skip, batch, steps, total_steps, base_lr,
+                 min_lr_frac, loss):
+    n = inputs.shape[0]
+    lr_fn = cosine_schedule(base_lr, total_steps, min_lr_frac)
+    # Fresh shuffle each epoch; drop-last batching (different tail every epoch).
+    perm = jax.random.permutation(epoch_key, n)[: steps * batch]
+    batches = perm.reshape(steps, batch)
+
+    def loss_fn(p, xb, yb):
+        pred = skipping_dnn.forward(p, xb, regulated=cfg_reg, skip=cfg_skip)
+        if loss == "l1":
+            return jnp.mean(jnp.abs(pred - yb))
+        return jnp.mean(jnp.square(pred - yb))
+
+    def body(carry, idx):
+        p, s, step = carry
+        xb = jnp.take(inputs, idx, axis=0)
+        yb = jnp.take(targets, idx, axis=0)
+        lval, grads = jax.value_and_grad(loss_fn)(p, xb, yb)
+        lr = lr_fn(step)
+        p, s = adamw_update(grads, s, p, lr=lr)
+        return (p, s, step + 1), lval
+
+    (params, opt_state, _), losses = jax.lax.scan(
+        body, (params, opt_state, start_step), batches)
+    return params, opt_state, jnp.mean(losses)
+
+
+def train(params, inputs: np.ndarray, targets: np.ndarray, cfg: TrainConfig,
+          net_cfg: skipping_dnn.SkippingDNNConfig, opt_state=None,
+          start_epoch: int = 0, epochs: int | None = None):
+    """Run ``epochs`` (default cfg.epochs) of online learning.
+
+    Returns ``(params, opt_state, history)``; pass back ``opt_state`` and
+    ``start_epoch`` to continue (the evolution benchmarks train one epoch at
+    a time to trace PSNR/OLR curves, paper Figs. 7/12/16).
+    """
+    epochs = cfg.epochs if epochs is None else epochs
+    if opt_state is None:
+        opt_state = adamw_init(params)
+    n = inputs.shape[0]
+    batch = min(cfg.batch, n)
+    steps = max(1, n // batch)
+    total_steps = steps * cfg.epochs
+    xs = jnp.asarray(inputs)
+    ys = jnp.asarray(targets)
+    history = []
+    key = jax.random.PRNGKey(cfg.seed)
+    for e in range(start_epoch, start_epoch + epochs):
+        ekey = jax.random.fold_in(key, e)
+        start_step = jnp.asarray(e * steps, jnp.int32)
+        params, opt_state, mloss = _train_epoch(
+            params, opt_state, xs, ys, ekey, start_step,
+            cfg_reg=net_cfg.regulated, cfg_skip=net_cfg.skip, batch=batch,
+            steps=steps, total_steps=total_steps, base_lr=cfg.lr,
+            min_lr_frac=cfg.min_lr_frac, loss=cfg.loss)
+        history.append(float(mloss))
+    return params, opt_state, history
+
+
+def predict_residual(params, inputs: np.ndarray,
+                     net_cfg: skipping_dnn.SkippingDNNConfig,
+                     batch: int = 64) -> np.ndarray:
+    """Predicted normalized residual for every slice, [N,H,W]."""
+    outs = []
+    xs = jnp.asarray(inputs)
+    for i in range(0, inputs.shape[0], batch):
+        out = skipping_dnn.forward(params, xs[i:i + batch],
+                                   regulated=net_cfg.regulated, skip=net_cfg.skip)
+        outs.append(np.asarray(out[..., 0]))
+    return np.concatenate(outs, axis=0)

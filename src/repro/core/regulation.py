@@ -1,0 +1,52 @@
+"""Error regulation (§3.3): strict 1× control and relaxed 2× regulation.
+
+* strict   — enhanced points whose error exceeds ``eb`` are outliers; their
+  coordinates are stored (``repro.compressors.outliers``) and they are
+  replaced by the decompressed value at decode time — which is in-bound by
+  the conventional compressor's guarantee, so the 1× bound holds everywhere.
+* relaxed  — no outlier storage; the regulated Sigmoid head already caps the
+  added residual at ``±eb`` so the worst case is ``2×eb`` (Fig. 6 Case B).
+* unregulated — linear head, no guarantee (paper ablation; better PSNR,
+  worse MAE/DSSIM tails).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+MODES = ("strict", "relaxed", "unregulated")
+
+
+def enhance(decomp: np.ndarray, resid_norm: np.ndarray, eb: float,
+            out_dtype=None) -> np.ndarray:
+    """X̂ = X' + R̂ where R̂ = resid_norm * eb (resid_norm from the DNN)."""
+    out_dtype = out_dtype or decomp.dtype
+    enh = decomp.astype(np.float64) + resid_norm.astype(np.float64) * eb
+    return enh.astype(out_dtype)
+
+
+def outlier_mask(orig: np.ndarray, enhanced: np.ndarray, eb: float) -> np.ndarray:
+    """Points where the *final-dtype* enhanced value violates the 1× bound."""
+    err = np.abs(enhanced.astype(np.float64) - orig.astype(np.float64))
+    return err > eb
+
+
+def apply_strict(enhanced: np.ndarray, decomp: np.ndarray,
+                 mask: np.ndarray) -> np.ndarray:
+    """Replace outliers with the in-bound decompressed values (Fig. 5)."""
+    out = enhanced.copy()
+    out[mask] = decomp[mask]
+    return out
+
+
+def check_bound(orig: np.ndarray, rec: np.ndarray, eb: float, mode: str) -> dict:
+    """Verification helper used by tests/benchmarks (paper 'error validation')."""
+    err = np.abs(rec.astype(np.float64) - orig.astype(np.float64))
+    finite = np.isfinite(np.asarray(orig, dtype=np.float64))
+    maxerr = float(err[finite].max()) if finite.any() else 0.0
+    limit = {"strict": eb, "relaxed": 2.0 * eb, "unregulated": np.inf}[mode]
+    return {
+        "max_abs_err": maxerr,
+        "bound": limit,
+        "ok": bool(maxerr <= limit),
+        "olr": float((err[finite] > eb).mean()) if finite.any() else 0.0,
+    }

@@ -1,0 +1,135 @@
+"""The paper's lightweight *skipping DNN* enhancer (§3.2.2, Fig. 8).
+
+Ten conv layers — four stride-2 down-samplings, four stride-2 up-samplings
+with skip-connection concatenations, plus input/output convs — totalling
+~3,073 parameters at ``c_in=1`` (the paper reports "a 10-layer network
+requires only 3,000 parameters").  Pure-JAX pytree params; the forward pass
+is `jit`/`vmap`/`shard_map`-friendly so thousands of per-block enhancers can
+train simultaneously across a pod (DESIGN.md §3, batched block training).
+
+Output heads (§3.3.2, Fig. 6):
+  * ``regulated``   — Sigmoid squashed to ``(2σ(z)−1) ∈ (−1, 1)``; since the
+    residual target is normalized by the error bound, the enhanced value can
+    exactly reach the original (balanced regulation, Case B) while the total
+    error stays ≤ 2×eb.
+  * ``unregulated`` — linear head, no bound (the paper's ablation).
+
+``skip=False`` gives the non-skipping ablation of Fig. 4 (same depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+@dataclasses.dataclass(frozen=True)
+class SkippingDNNConfig:
+    c_in: int = 1                 # 1 = single-field, >1 = cross-field channels
+    widths: tuple = (4, 4, 6, 6, 8)   # conv_in + four encoder stages
+    regulated: bool = True
+    skip: bool = True
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def _conv_param(key, kh, kw, cin, cout, dtype):
+    wkey, _ = jax.random.split(key)
+    fan_in = kh * kw * cin
+    # Note: float(...) keeps the He scale weakly typed (x64 mode would
+    # otherwise promote the whole kernel to float64).
+    w = jax.random.normal(wkey, (kh, kw, cin, cout), dtype) * float(np.sqrt(2.0 / fan_in))
+    return {"w": w.astype(dtype), "b": jnp.zeros((cout,), dtype)}
+
+
+def init_params(key, cfg: SkippingDNNConfig):
+    c0, c1, c2, c3, c4 = cfg.widths
+    dt = cfg.jdtype
+    keys = jax.random.split(key, 10)
+    if cfg.skip:
+        up_in = (c4, c3 + c3, c2 + c2, c1 + c1)  # after concat with encoder feature
+        out_in = c1 + c0
+    else:
+        up_in = (c4, c3, c2, c1)
+        out_in = c1
+    return {
+        "conv_in": _conv_param(keys[0], 3, 3, cfg.c_in, c0, dt),
+        "down1": _conv_param(keys[1], 3, 3, c0, c1, dt),
+        "down2": _conv_param(keys[2], 3, 3, c1, c2, dt),
+        "down3": _conv_param(keys[3], 3, 3, c2, c3, dt),
+        "down4": _conv_param(keys[4], 3, 3, c3, c4, dt),
+        "up1": _conv_param(keys[5], 3, 3, up_in[0], c3, dt),
+        "up2": _conv_param(keys[6], 3, 3, up_in[1], c2, dt),
+        "up3": _conv_param(keys[7], 3, 3, up_in[2], c1, dt),
+        "up4": _conv_param(keys[8], 3, 3, up_in[3], c1, dt),
+        "conv_out": _conv_param(keys[9], 3, 3, out_in, 1, dt),
+    }
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def _conv(x, p, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=_DN)
+    return y + p["b"]
+
+
+def _deconv(x, p):
+    y = jax.lax.conv_transpose(
+        x, p["w"], strides=(2, 2), padding="SAME", dimension_numbers=_DN)
+    return y + p["b"]
+
+
+@partial(jax.jit, static_argnames=("regulated", "skip"))
+def forward(params, x, *, regulated: bool = True, skip: bool = True):
+    """x: [N, H, W, C_in] normalized decompressed slices -> [N, H, W, 1]
+    normalized residual prediction.  H, W are padded to multiples of 16
+    internally (replicate edges) and cropped back."""
+    n, h, w, _ = x.shape
+    ph, pw = (-h) % 16, (-w) % 16
+    if ph or pw:
+        x = jnp.pad(x, ((0, 0), (0, ph), (0, pw), (0, 0)), mode="edge")
+
+    act = jax.nn.relu
+    f0 = act(_conv(x, params["conv_in"]))          # H
+    f1 = act(_conv(f0, params["down1"], stride=2))  # H/2
+    f2 = act(_conv(f1, params["down2"], stride=2))  # H/4
+    f3 = act(_conv(f2, params["down3"], stride=2))  # H/8
+    f4 = act(_conv(f3, params["down4"], stride=2))  # H/16
+
+    u = act(_deconv(f4, params["up1"]))             # H/8
+    if skip:
+        u = jnp.concatenate([u, f3], axis=-1)
+    u = act(_deconv(u, params["up2"]))              # H/4
+    if skip:
+        u = jnp.concatenate([u, f2], axis=-1)
+    u = act(_deconv(u, params["up3"]))              # H/2
+    if skip:
+        u = jnp.concatenate([u, f1], axis=-1)
+    u = act(_deconv(u, params["up4"]))              # H
+    if skip:
+        u = jnp.concatenate([u, f0], axis=-1)
+    z = _conv(u, params["conv_out"])                # [N,H,W,1]
+
+    if regulated:
+        out = 2.0 * jax.nn.sigmoid(z) - 1.0         # (−1, 1): balanced 2×eb regulation
+    else:
+        out = z
+    if ph or pw:
+        out = out[:, :h, :w, :]
+    return out
+
+
+def apply(params, x, cfg: SkippingDNNConfig):
+    return forward(params, x, regulated=cfg.regulated, skip=cfg.skip)

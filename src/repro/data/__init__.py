@@ -1,0 +1,1 @@
+from . import fields, tokens  # noqa: F401

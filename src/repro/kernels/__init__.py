@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the compression hot spots (+ ops.py wrappers,
+ref.py pure-jnp oracles).  Validated in interpret mode on CPU; written
+against the TPU memory hierarchy (HBM -> VMEM tiles, VPU elementwise)."""
+from . import ops, ref  # noqa: F401

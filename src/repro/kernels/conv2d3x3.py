@@ -1,0 +1,84 @@
+"""Fused 3×3 conv + bias + ReLU for the skipping enhancer — Pallas TPU kernel.
+
+The enhancer's channels are tiny (4–8), so a 3×3 conv here has arithmetic
+intensity ≈ 9·C_in flops/byte ≤ 72 — far below the MXU roofline knee; the op
+is bandwidth-bound and the right TPU mapping is the *VPU* shifted-accumulate
+form, not an im2col matmul (DESIGN.md §3, hardware adaptation).  What the
+kernel buys is fusion: unfused XLA will materialize the conv output before
+bias/ReLU; here one VMEM pass computes
+
+    y = relu( Σ_{dy,dx} shift(x, dy, dx) @ W[dy,dx] + b )
+
+with optional stride-2 decimation for the encoder stages — halving the HBM
+writeback vs conv-then-slice.
+
+Tiling: grid over the batch of slices; each step holds one full (H, W, C_in)
+slice plus the (H, W, C_out) accumulator in VMEM (≤512×512×8 fp32 = 8 MB).
+The 3×3 halo never crosses a block boundary because H/W are untiled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _same_pads(size: int, stride: int) -> tuple[int, int, int]:
+    """XLA SAME-padding arithmetic for a 3-tap window."""
+    out = (size + stride - 1) // stride
+    total = max((out - 1) * stride + 3 - size, 0)
+    lo = total // 2
+    return out, lo, total - lo
+
+
+def _kernel(x_ref, w_ref, b_ref, y_ref, *, stride: int, relu: bool,
+            pads: tuple):
+    x = x_ref[...][0]          # (H, W, Cin)
+    w = w_ref[...]             # (3, 3, Cin, Cout)
+    b = b_ref[...]             # (Cout,)
+    h, wd, cin = x.shape
+    cout = w.shape[-1]
+    (ho, ylo, yhi), (wo, xlo, xhi) = pads
+    # SAME padding once in VMEM; then 9 shifted (H,W,Cin)x(Cin,Cout) matmuls
+    # accumulated at the strided output positions directly.
+    xp = jnp.pad(x, ((ylo, yhi), (xlo, xhi), (0, 0)))
+    acc = jnp.zeros((ho, wo, cout), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            win = jax.lax.slice(
+                xp, (dy, dx, 0),
+                (dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1, cin),
+                (stride, stride, 1))
+            acc = acc + jnp.einsum("hwc,cf->hwf", win.astype(jnp.float32),
+                                   w[dy, dx].astype(jnp.float32))
+    acc = acc + b.astype(jnp.float32)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    y_ref[...] = acc[None].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "relu", "interpret"))
+def conv2d3x3(x: jax.Array, w: jax.Array, b: jax.Array, *, stride: int = 1,
+              relu: bool = True, interpret: bool = True) -> jax.Array:
+    """x: (N, H, W, Cin) fp32; w: (3, 3, Cin, Cout); b: (Cout,).
+    Returns (N, H', W', Cout) with H' = ceil(H/stride)."""
+    n, h, wd, cin = x.shape
+    cout = w.shape[-1]
+    ho, ylo, yhi = _same_pads(h, stride)
+    wo, xlo, xhi = _same_pads(wd, stride)
+    kernel = functools.partial(_kernel, stride=stride, relu=relu,
+                               pads=((ho, ylo, yhi), (wo, xlo, xhi)))
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, wd, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), x.dtype),
+        interpret=interpret,
+    )(x, w, b)

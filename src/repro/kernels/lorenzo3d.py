@@ -1,0 +1,114 @@
+"""Fused pre-quantization + 3-D Lorenzo delta — Pallas TPU kernel.
+
+The compression hot loop (DESIGN.md §3): cuSZ's dual-quantization turns SZ's
+sequential Lorenzo recurrence into a pure stencil, and this kernel fuses the
+two memory-bound passes —
+
+    q = round(x / (2*eb))          (prequant to the error-bound lattice)
+    d = Δx Δy Δz q                 (8-point first-order Lorenzo delta)
+
+— into a single HBM→VMEM pass, plus a fused reconstruction output
+``rec = q * 2*eb`` (what the decompressor will see; NeurLZ trains against
+it).  An unfused jnp pipeline writes q to HBM and re-reads it with shifted
+gathers; at 512³ fp32 that is several× the traffic of this kernel.
+
+Tiling: the grid walks z-slabs of ``tz`` planes; y/x stay at full extent in
+VMEM (fields are ≤512² planes → ≤1 MB/plane fp32; pick ``tz`` so the slab
+working set fits VMEM).  The one-plane z halo is satisfied by binding the
+*same* input array a second time with a block-index map shifted by −1 —
+no host-side padding copy; the kernel masks the z=0 boundary.
+
+The inverse (``undelta``) is three prefix sums; the Pallas TPU grid is a
+sequential loop, so a VMEM scratch plane carries the running z-sum across
+slabs — a single pass over the data.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fwd_kernel(x_ref, xprev_ref, d_ref, rec_ref, *, inv_step: float, step: float):
+    """One z-slab: prequant + separable Lorenzo delta (+ reconstruction)."""
+    zi = pl.program_id(0)
+    x = x_ref[...]
+    q = jnp.round(x * inv_step).astype(jnp.int32)
+
+    # z-neighbor plane: last plane of the previous slab's prequant (zero at z=0).
+    qp_last = jnp.round(xprev_ref[...][-1:] * inv_step).astype(jnp.int32)
+    qp_last = jnp.where(zi == 0, jnp.zeros_like(qp_last), qp_last)
+
+    # Separable first differences Δz, Δy, Δx (their composition is the
+    # 8-point Lorenzo stencil; order is irrelevant).
+    d = q - jnp.concatenate([qp_last, q[:-1]], axis=0)
+    d = d - jnp.concatenate([jnp.zeros_like(d[:, :1]), d[:, :-1]], axis=1)
+    d = d - jnp.concatenate([jnp.zeros_like(d[:, :, :1]), d[:, :, :-1]], axis=2)
+
+    d_ref[...] = d
+    rec_ref[...] = (q.astype(x.dtype) * step).astype(x.dtype)
+
+
+def _inv_kernel(d_ref, q_ref, carry_ref):
+    """One z-slab of the inverse: cumsum x, y, then z with a carried plane."""
+    zi = pl.program_id(0)
+
+    @pl.when(zi == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    d = d_ref[...]
+    s = jnp.cumsum(d, axis=2, dtype=jnp.int32)
+    s = jnp.cumsum(s, axis=1, dtype=jnp.int32)
+    s = jnp.cumsum(s, axis=0, dtype=jnp.int32)  # within-slab z prefix
+    q = s + carry_ref[...]                      # broadcast carried plane
+    q_ref[...] = q
+    carry_ref[...] = q[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("eb", "tz", "interpret"))
+def lorenzo3d_fwd(x: jax.Array, eb: float, *, tz: int = 8,
+                  interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Fused prequant+delta.  ``x``: (D, H, W) float; returns (delta int32,
+    rec same-dtype).  D must be divisible by ``tz`` (ops.py pads)."""
+    dsz, h, w = x.shape
+    assert dsz % tz == 0, (dsz, tz)
+    step = 2.0 * float(eb)
+    kernel = functools.partial(_fwd_kernel, inv_step=1.0 / step, step=step)
+    return pl.pallas_call(
+        kernel,
+        grid=(dsz // tz,),
+        in_specs=[
+            pl.BlockSpec((tz, h, w), lambda i: (i, 0, 0)),
+            # Same array, previous slab (clamped at 0; kernel masks z=0).
+            pl.BlockSpec((tz, h, w), lambda i: (jnp.maximum(i - 1, 0), 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tz, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tz, h, w), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, jnp.int32),
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+        ],
+        interpret=interpret,
+    )(x, x)
+
+
+@functools.partial(jax.jit, static_argnames=("tz", "interpret"))
+def lorenzo3d_inv(d: jax.Array, *, tz: int = 8, interpret: bool = True) -> jax.Array:
+    """Inverse delta: int32 lattice codes back from the delta stream."""
+    dsz, h, w = d.shape
+    assert dsz % tz == 0, (dsz, tz)
+    return pl.pallas_call(
+        _inv_kernel,
+        grid=(dsz // tz,),
+        in_specs=[pl.BlockSpec((tz, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tz, h, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(d.shape, jnp.int32),
+        scratch_shapes=[pltpu.VMEM((h, w), jnp.int32)],
+        interpret=interpret,
+    )(d)

@@ -1,0 +1,90 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile multiples, dtype plumbing, and the interpret-mode
+switch (interpret=True on CPU — the kernels TARGET TPU; this container
+validates them by executing the kernel body in Python).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .conv2d3x3 import conv2d3x3
+from .fused_enhance import fused_enhance
+from .lorenzo3d import lorenzo3d_fwd, lorenzo3d_inv
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick_tz(d: int, h: int, w: int, itemsize: int = 4,
+             vmem_budget: int = 12 * 2**20) -> int:
+    """Largest power-of-two slab depth whose working set (~4 slabs: two
+    inputs + two outputs) fits the VMEM budget and divides d."""
+    tz = 1
+    for cand in (2, 4, 8, 16, 32):
+        if d % cand == 0 and 4 * cand * h * w * itemsize <= vmem_budget:
+            tz = cand
+    return tz
+
+
+def lorenzo_quantize(x, eb: float, *, interpret: bool | None = None):
+    """Fused prequant + Lorenzo delta over a 3-D field (pads z to the tile).
+
+    Returns (delta int32, rec) with the original depth restored.
+    """
+    x = jnp.asarray(x)
+    if x.dtype == jnp.float64:
+        x32 = x.astype(jnp.float32)  # kernel computes in fp32; rec returned fp32
+    else:
+        x32 = x
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    d0, h, w = x32.shape
+    tz = _pick_tz(d0, h, w)
+    pad = (-d0) % tz
+    if pad:
+        x32 = jnp.concatenate([x32, jnp.zeros((pad, h, w), x32.dtype)], axis=0)
+    delta, rec = lorenzo3d_fwd(x32, eb, tz=tz, interpret=interpret)
+    return delta[:d0], rec[:d0]
+
+
+def lorenzo_dequantize(delta, eb: float, *, interpret: bool | None = None):
+    """Inverse: delta codes -> reconstruction (q * 2eb)."""
+    delta = jnp.asarray(delta, jnp.int32)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    d0, h, w = delta.shape
+    tz = _pick_tz(d0, h, w)
+    pad = (-d0) % tz
+    if pad:
+        delta = jnp.concatenate([delta, jnp.zeros((pad, h, w), jnp.int32)], axis=0)
+    q = lorenzo3d_inv(delta, tz=tz, interpret=interpret)
+    return q[:d0].astype(jnp.float32) * (2.0 * float(eb))
+
+
+def enhance(z, decomp, orig, eb: float, *, regulated: bool = True,
+            strict: bool = True, interpret: bool | None = None):
+    """Fused regulate+add+outlier over an N-D field; shapes all equal."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    z = jnp.asarray(z, jnp.float32)
+    decomp = jnp.asarray(decomp)
+    orig = jnp.asarray(orig, decomp.dtype)
+    shape = decomp.shape
+    w = shape[-1]
+    rows = int(np.prod(shape[:-1]))
+    z2, d2, o2 = (a.reshape(rows, w) for a in (z, decomp, orig))
+    tr = 1
+    for cand in (8, 32, 128, 256):
+        if rows % cand == 0 and cand * w * 4 * 5 <= 12 * 2**20:
+            tr = cand
+    out, mask = fused_enhance(z2, d2, o2, eb, regulated=regulated,
+                              strict=strict, tr=tr, interpret=interpret)
+    return out.reshape(shape), mask.reshape(shape)
+
+
+def conv3x3(x, w, b, *, stride: int = 1, relu: bool = True,
+            interpret: bool | None = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return conv2d3x3(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                     stride=stride, relu=relu, interpret=interpret)

@@ -1,0 +1,377 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — but a
+scan-over-layers training step does ~all of its work inside nested while
+loops (layer segments × microbatches × attention chunks), so its FLOP/byte
+numbers undercount by the product of trip counts.  This module re-derives
+them from ``compiled.as_text()``:
+
+  * every while op carries ``backend_config={"known_trip_count":{"n":...}}``
+    (static scan bounds) — nested loop costs multiply out;
+  * dot/convolution FLOPs from operand shapes + contracting dims;
+  * bytes ≈ Σ (operand + result bytes) per instruction at fusion boundaries
+    (the same HBM-traffic proxy XLA's own analysis uses);
+  * collectives are tallied per enclosing loop with ring-algorithm wire
+    factors and replica-group sizes (see ``roofline.wire_factor``).
+
+The result is the per-device cost of one step of the *SPMD-partitioned*
+module — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "and",
+    "or", "xor", "not", "negate", "abs", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "compare", "select", "clamp", "sign", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical", "remainder", "atan2",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "logistic", "rsqrt", "sqrt",
+                   "power", "sine", "cosine", "expm1", "log1p", "erf", "cbrt"}
+_MOVE = {"copy", "transpose", "broadcast", "iota", "reverse", "pad",
+         "concatenate", "slice", "dynamic-slice", "dynamic-update-slice",
+         "gather", "scatter", "convert", "reduce", "reduce-window",
+         "select-and-scatter", "sort", "rng", "rng-bit-generator", "map",
+         "reshape", "cholesky", "triangular-solve", "fft", "clz", "popcnt"}
+_SKIP = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "add-dependency", "partition-id", "replica-id",
+         "opt-barrier", "custom-call", "domain", "infeed", "outfeed"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+) = ")
+_OP_RE = re.compile(r"^([\w\-]+)\(")
+
+
+def _split_instr(line: str):
+    """'%n = TYPE op(operands), attrs' -> (name, type_str, op, rest).
+
+    Handles tuple types containing commas, layouts, and /*index=k*/ comments
+    by scanning to the matching close paren."""
+    nm = _NAME_RE.match(line)
+    if not nm:
+        return None
+    rest = line[nm.end():]
+    if rest.startswith("("):
+        depth = 0
+        idx = 0
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, after = rest[:idx + 1], rest[idx + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, after = rest[:sp], rest[sp + 1:].lstrip()
+    om = _OP_RE.match(after)
+    if not om:
+        return None
+    return nm.group(1), type_str, om.group(1), after[om.end():]
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\((.*)\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=(%[\w\.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w\.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w\.\-]+)")
+_LHS_CD_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BD_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_elems_bytes(text: str) -> tuple[int, int, list[list[int]]]:
+    """All shapes in ``text`` -> (total elems, total bytes, dims list)."""
+    elems, nbytes, dims_all = 0, 0, []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dd = [int(x) for x in dims.split(",") if x] or [1]
+        n = 1
+        for d in dd:
+            n *= d
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+        dims_all.append(dd)
+    return elems, nbytes, dims_all
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    result_elems: int
+    result_bytes: int
+    result_dims: list
+    operands: list
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)  # name -> (elems, bytes, dims)
+    params: list = field(default_factory=list)  # ordered header param names
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    coll_wire: float = 0.0
+    coll_per_kind: dict = field(default_factory=dict)
+    coll_count: dict = field(default_factory=dict)
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.flops += other.flops * times
+        self.transcendentals += other.transcendentals * times
+        self.bytes += other.bytes * times
+        self.coll_wire += other.coll_wire * times
+        for k, v in other.coll_per_kind.items():
+            self.coll_per_kind[k] = self.coll_per_kind.get(k, 0.0) + v * times
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0.0) + v * times
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hm = _HEADER_RE.match(line.strip())
+        if hm and line.rstrip().endswith("{"):
+            cur = Computation(hm.group(1))
+            comps[cur.name] = cur
+            if line.strip().startswith("ENTRY"):
+                entry = cur.name
+            # header params: "%p: bf16[4,8]" -> shape table
+            for pname, dt, dims in re.findall(
+                    r"([\w\.\-]+): ([a-z0-9]+)\[([0-9,]*)\]", hm.group(2)):
+                e, b, dd = _shape_elems_bytes(f"{dt}[{dims}]")
+                cur.shapes["%" + pname] = (e, b, dd)
+                cur.params.append("%" + pname)
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _split_instr(line)
+        if not im:
+            continue
+        name, rtype, op, rest = im
+        e, b, dims = _shape_elems_bytes(rtype)
+        # split operand list from trailing attrs at the matching paren
+        depth, idx = 1, 0
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        opnds = re.findall(r"%[\w\.\-]+", rest[:idx])
+        attrs = rest[idx + 1:]
+        cur.shapes[name] = (e, b, dims)
+        cur.instrs.append(Instr(name, op, e, b, dims, opnds, attrs))
+    return comps, entry
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    return {"all-gather": (n - 1) / n, "reduce-scatter": float(n - 1),
+            "all-reduce": 2.0 * (n - 1) / n, "all-to-all": (n - 1) / n,
+            "collective-permute": 1.0}[kind]
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._memo: dict[str, Cost] = {}
+
+    def cost(self) -> Cost:
+        return self._comp_cost(self.entry, top=True)
+
+    def _operand_bytes(self, comp: Computation, instr: Instr) -> int:
+        return sum(comp.shapes.get(o, (0, 0, []))[1] for o in instr.operands)
+
+    _SLICE_OPS = ("dynamic-slice", "slice", "gather")
+
+    def _fusion_operand_bytes(self, comp, instr, called) -> int:
+        total = 0
+        for pos, opnd in enumerate(instr.operands):
+            full = comp.shapes.get(opnd, (0, 0, []))[1]
+            if pos < len(called.params):
+                pname = called.params[pos]
+                uses = [u for u in called.instrs if pname in u.operands]
+                if uses and all(u.op in self._SLICE_OPS for u in uses):
+                    total += sum(u.result_bytes for u in uses)
+                    continue
+            total += full
+        return total
+
+    def _move_bytes(self, comp: Computation, instr: Instr) -> int:
+        """HBM traffic for data-movement ops: slicing ops touch only the
+        slice (in-place bufferization), not the whole operand buffer."""
+        op = instr.op
+        if op in ("dynamic-slice", "slice", "gather"):
+            return 2 * instr.result_bytes
+        if op in ("dynamic-update-slice", "scatter"):
+            upd = (comp.shapes.get(instr.operands[1], (0, 0, []))[1]
+                   if len(instr.operands) > 1 else instr.result_bytes)
+            return 2 * upd
+        if op in ("broadcast", "iota"):
+            return instr.result_bytes
+        if op in ("copy", "transpose", "convert", "reverse", "pad", "reshape"):
+            return 2 * instr.result_bytes
+        if op == "concatenate":
+            return 2 * instr.result_bytes
+        return instr.result_bytes + self._operand_bytes(comp, instr)
+
+    def _comp_cost(self, name: str, top: bool = False,
+                   inside_fusion: bool = False) -> Cost:
+        key = (name, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps[name]
+        total = Cost()
+        for ins in comp.instrs:
+            op = ins.op
+            base = op.split("-start")[0] if op.endswith("-start") else op
+            if op.endswith("-done"):
+                continue
+            if base in _COLLECTIVES:
+                n = _group_size(ins.attrs)
+                wf = _wire_factor(base, n)
+                rb = ins.result_bytes
+                total.coll_wire += rb * wf
+                total.coll_per_kind[base] = total.coll_per_kind.get(base, 0.0) + rb * wf
+                total.coll_count[base] = total.coll_count.get(base, 0.0) + 1
+                if not inside_fusion:
+                    total.bytes += rb + self._operand_bytes(comp, ins)
+                continue
+            if op == "while":
+                body = _BODY_RE.search(ins.attrs)
+                trip = _TRIP_RE.search(ins.attrs)
+                trips = int(trip.group(1)) if trip else 1
+                if body:
+                    total.add(self._comp_cost(body.group(1)), trips)
+                continue
+            if op == "conditional":
+                brs = _BRANCHES_RE.search(ins.attrs)
+                if brs:
+                    costs = [self._comp_cost(b.strip())
+                             for b in brs.group(1).split(",") if b.strip()]
+                    if costs:
+                        total.add(max(costs, key=lambda c: c.flops))
+                continue
+            if op in ("call", "fusion", "async-start"):
+                cm = _CALLS_RE.search(ins.attrs)
+                if op == "fusion":
+                    # fusion: inner flops count, but memory traffic is the
+                    # fusion boundary (operands + result); a fusion operand
+                    # that is only ever SLICED inside contributes its slice
+                    # sizes, not the whole buffer (in-place bufferization).
+                    if cm:
+                        inner = self._comp_cost(cm.group(1), inside_fusion=True)
+                        c = Cost(flops=inner.flops,
+                                 transcendentals=inner.transcendentals)
+                        c.coll_wire = inner.coll_wire
+                        c.coll_per_kind = dict(inner.coll_per_kind)
+                        c.coll_count = dict(inner.coll_count)
+                        total.add(c)
+                        total.bytes += (ins.result_bytes
+                                        + self._fusion_operand_bytes(
+                                            comp, ins, self.comps[cm.group(1)]))
+                    else:
+                        total.bytes += (ins.result_bytes
+                                        + self._operand_bytes(comp, ins))
+                elif cm:
+                    total.add(self._comp_cost(cm.group(1)))
+                continue
+            if op == "dot":
+                lhs = comp.shapes.get(ins.operands[0], (0, 0, [[1]]))
+                lhs_dims = lhs[2][0] if lhs[2] else [1]
+                cds = _LHS_CD_RE.search(ins.attrs)
+                contract = 1
+                if cds and cds.group(1):
+                    for d in cds.group(1).split(","):
+                        if int(d) < len(lhs_dims):
+                            contract *= lhs_dims[int(d)]
+                total.flops += 2.0 * ins.result_elems * contract
+                if not inside_fusion:
+                    total.bytes += ins.result_bytes + self._operand_bytes(comp, ins)
+                continue
+            if op == "convolution":
+                k = comp.shapes.get(ins.operands[1], (0, 0, [[1]]))
+                kelems = k[0]
+                out_feat = ins.result_dims[0][-1] if ins.result_dims else 1
+                m = re.search(r"dim_labels=\S*_(\S*?)->", ins.attrs)
+                # flops ≈ 2 · out_elems · (kernel elems / out_features)
+                total.flops += 2.0 * ins.result_elems * max(kelems / max(out_feat, 1), 1)
+                if not inside_fusion:
+                    total.bytes += ins.result_bytes + self._operand_bytes(comp, ins)
+                continue
+            if base in _ELEMENTWISE or base in _TRANSCENDENTAL or base in _MOVE:
+                if base in _ELEMENTWISE:
+                    total.flops += ins.result_elems
+                elif base in _TRANSCENDENTAL:
+                    total.flops += ins.result_elems
+                    total.transcendentals += ins.result_elems
+                elif base == "reduce":
+                    total.flops += self._operand_bytes(comp, ins) // 4
+                if not inside_fusion:
+                    total.bytes += self._move_bytes(comp, ins)
+                continue
+            if op in _SKIP:
+                if op == "custom-call" and not inside_fusion:
+                    total.bytes += ins.result_bytes + self._operand_bytes(comp, ins)
+                continue
+            # default: treat as data movement
+            if not inside_fusion:
+                total.bytes += ins.result_bytes + self._operand_bytes(comp, ins)
+        self._memo[key] = total
+        return total
+
+
+def analyze(text: str) -> dict:
+    a = Analyzer(text)
+    c = a.cost()
+    return {
+        "flops": c.flops,
+        "transcendentals": c.transcendentals,
+        "bytes": c.bytes,
+        "collective_wire_bytes": c.coll_wire,
+        "collective_per_kind": c.coll_per_kind,
+        "collective_count": c.coll_count,
+    }

@@ -1,0 +1,139 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_device / 197e12        (bf16 MXU peak)
+    memory     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+    collective = wire_bytes_per_device / 50e9         (per-link ICI)
+
+cost_analysis() supplies FLOPs/bytes for the per-device SPMD module.
+Collective bytes are NOT in cost_analysis — we parse the post-optimization
+HLO and sum per-op wire traffic with ring-algorithm factors:
+
+    all-gather        result × (n−1)/n
+    reduce-scatter    result × (n−1)          (operand = result × n)
+    all-reduce        result × 2(n−1)/n
+    all-to-all        result × (n−1)/n
+    collective-permute result × 1
+
+``MODEL_FLOPS`` (6·N_active·D for training, 2·N_active·D for inference) over
+HLO FLOPs is the "useful-compute" ratio — it exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^)\n]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_TUPLE_COLL_RE = re.compile(
+    r"=\s+\(((?:[a-z0-9]+\[[0-9,]*\][^,)]*,?\s*)+)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def wire_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(n - 1)
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind == "all-to-all":
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic summary from post-SPMD HLO text."""
+    per_kind: dict[str, float] = {}
+    raw_result_bytes: dict[str, int] = {}
+    count: dict[str, int] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        shapes: list[tuple[str, str]] = []
+        kind = None
+        if m:
+            kind = m.group(3)
+            shapes = [(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                shapes = re.findall(r"([a-z0-9]+)\[([0-9,]*)\]", mt.group(1))
+        if kind is None:
+            continue
+        if "-done(" in line:   # async pair: count the start only
+            continue
+        n = _group_size(line)
+        rb = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        per_kind[kind] = per_kind.get(kind, 0.0) + rb * wire_factor(kind, n)
+        raw_result_bytes[kind] = raw_result_bytes.get(kind, 0) + rb
+        count[kind] = count.get(kind, 0) + 1
+    total = sum(per_kind.values())
+    return {"wire_bytes": total, "per_kind_wire": per_kind,
+            "per_kind_result_bytes": raw_result_bytes, "per_kind_count": count}
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   wire_bytes_per_device: float) -> dict:
+    compute = flops_per_device / PEAK_FLOPS
+    memory = bytes_per_device / HBM_BW
+    coll = wire_bytes_per_device / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", coll), key=lambda kv: kv[1])[0]
+    bound = max(compute, memory, coll)
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant,
+        # fraction of roofline-limited time spent on useful compute
+        "compute_fraction_of_bound": compute / bound if bound else 0.0,
+    }
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (inference), per chip."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence per step
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_chips

@@ -1,0 +1,245 @@
+"""GQA/MQA attention with qk-norm, RoPE, sliding windows, and a KV cache.
+
+Train/prefill path computes full (optionally windowed) causal attention;
+decode path attends one new token against a fixed-capacity cache.  Head
+projections are tensor-parallel (``w_in``/``w_out`` naming — see
+``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+from .layers import apply_rope, dense_init, head_rmsnorm
+
+NEG = -1e30
+
+
+def init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_q_in": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "w_k_in": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "w_v_in": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "w_o_out": dense_init(ks[3], cfg.n_heads * hd, d, dtype,
+                              scale=1.0 / np.sqrt(cfg.n_heads * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions, theta):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["w_q_in"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["w_k_in"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["w_v_in"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = head_rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    # Anchor SPMD: batch over (pod,data), heads over model (falls back to
+    # head_dim for small-KV archs via the divisibility guard).
+    q = constrain(q, ("batch", None, "model", None))
+    k = constrain(k, ("batch", None, "model", None))
+    v = constrain(v, ("batch", None, "model", None))
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """q: [B,S,H,D]; k,v: [B,T,KV,D]; mask: [B or 1, 1, S, T] additive.
+
+    Dense path — used for decode (S=1) and small smoke shapes; training and
+    prefill go through :func:`_sdpa_chunked` (the S² score tensor would
+    dominate HBM otherwise)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    q = q.reshape(b, s, kv, groups, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    scores = scores + mask[:, :, None, :, :]     # broadcast over groups
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, hd)
+
+
+def _sdpa_chunked(q, k, v, cfg, *, causal: bool, window: int | None,
+                  cq: int = 512, ck: int = 1024, skip_uncausal: bool = False):
+    """Flash-style online-softmax attention: O(S·chunk) memory, never
+    materializing the [S, T] score matrix (TPU adaptation of FA for XLA).
+
+    Both paths remat the per-q-chunk work (``jax.checkpoint``): the backward
+    pass recomputes block scores/probs exactly like FlashAttention's bwd,
+    so nothing S²-sized is ever saved.
+
+    ``skip_uncausal=True`` enumerates only the lower-triangular (and
+    in-window) chunk pairs — the §Perf compute-term optimization; the
+    baseline scans all chunk pairs with masking (same FLOPs as dense).
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    cq = min(cq, s)
+    ck = min(ck, s)
+    assert s % cq == 0 and s % ck == 0, (s, cq, ck)
+    nq, nk = s // cq, s // ck
+    qc = q.reshape(b, nq, cq, kv, g, hd).astype(jnp.float32) / np.sqrt(hd)
+    kc = k.reshape(b, nk, ck, kv, hd).astype(jnp.float32)
+    vc = v.reshape(b, nk, ck, kv, hd)
+    qc = constrain(qc, ("batch", None, None, "model", None, None))
+    kc = constrain(kc, ("batch", None, None, "model", None))
+    vc = constrain(vc, ("batch", None, None, "model", None))
+
+    def bias_for(i, j):
+        """Additive f32 mask bias [cq, ck] (no boolean `where` on the big
+        score tensor — keeps SPMD from materializing broadcast predicates)."""
+        qpos = i * cq + jnp.arange(cq, dtype=jnp.int32)
+        kpos = j * ck + jnp.arange(ck, dtype=jnp.int32)
+        bias = jnp.zeros((cq, ck), jnp.float32)
+        if causal:
+            bias = bias + jnp.where(kpos[None, :] <= qpos[:, None], 0.0, -1e30)
+        if window is not None:
+            bias = bias + jnp.where((qpos[:, None] - kpos[None, :]) < window,
+                                    0.0, -1e30)
+        return bias
+
+    def online_update(carry, sij, vblk):
+        m, l, acc = carry
+        m_new = jnp.maximum(m, sij.max(-1))
+        p = jnp.exp(sij - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        a_new = acc * alpha[..., None] + jnp.einsum(
+            "bqkgt,btkd->bqkgd", p, vblk.astype(jnp.float32))
+        return m_new, l_new, a_new
+
+    def row_for(qblk, i, js):
+        """One q-chunk against the kv chunks listed in ``js``."""
+        m = jnp.full((b, cq, kv, g), -1e30, jnp.float32)
+        l = jnp.zeros((b, cq, kv, g), jnp.float32)
+        acc = jnp.zeros((b, cq, kv, g, hd), jnp.float32)
+
+        def kv_step(carry, j):
+            kblk = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+            sij = jnp.einsum("bqkgd,btkd->bqkgt", qblk, kblk)
+            sij = sij + bias_for(i, j)[None, :, None, None, :]
+            return online_update(carry, sij, vblk), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m, l, acc), js)
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    if skip_uncausal and causal:
+        # Exact lower-triangle enumeration (§Perf compute-term optimization):
+        # only live chunk pairs are computed; rows with equal kv-counts could
+        # be batched, but an unrolled python loop over nq keeps HLO simple
+        # (nq is small — 8 at 4k/512).
+        out_rows = []
+        for i in range(nq):
+            js = [j for j in range(nk)
+                  if (j * ck <= i * cq + cq - 1)
+                  and (window is None or (i * cq - (j * ck + ck - 1)) < window)]
+            row = jax.checkpoint(
+                lambda qblk, jarr, i=i: row_for(qblk, i, jarr))(
+                    qc[:, i], jnp.asarray(js, jnp.int32))
+            out_rows.append(row)
+        out = jnp.stack(out_rows, axis=1)
+        return out.reshape(b, s, h, hd).astype(v.dtype)
+
+    # Baseline: scan over q chunks, inner scan over all kv chunks (masked).
+    all_js = jnp.arange(nk, dtype=jnp.int32)
+
+    @jax.checkpoint
+    def q_chunk_fn(qblk, i):
+        return row_for(qblk, i, all_js)
+
+    def q_chunk(_, inp):
+        qblk, i = inp                                          # [b,cq,kv,g,d]
+        return None, q_chunk_fn(qblk, i)
+
+    _, out = jax.lax.scan(q_chunk, None,
+                          (jnp.moveaxis(qc, 1, 0),
+                           jnp.arange(nq, dtype=jnp.int32)))
+    out = jnp.moveaxis(out, 0, 1)                              # [b,nq,cq,kv,g,d]
+    return out.reshape(b, s, h, hd).astype(v.dtype)
+
+
+def causal_mask(s: int, window: int | None, dtype=jnp.float32):
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    allow = j <= i
+    if window is not None:
+        allow &= (i - j) < window
+    return jnp.where(allow, 0.0, NEG).astype(dtype)[None, None]   # [1,1,S,S]
+
+
+def full_mask(s: int, dtype=jnp.float32):
+    return jnp.zeros((1, 1, s, s), dtype)
+
+
+DENSE_SDPA_MAX = 1024  # dense fallback for small (smoke-test) shapes
+
+
+def forward(p, cfg, x, positions, *, window=None, theta=None, mask=None,
+            skip_uncausal: bool = False):
+    """Train/prefill attention.  Returns (out, (k, v)) for cache capture."""
+    theta = cfg.rope_theta if theta is None else theta
+    q, k, v = _project_qkv(p, cfg, x, positions, theta)
+    s = x.shape[1]
+    if s <= DENSE_SDPA_MAX:
+        if mask is None:
+            mask = causal_mask(s, window) if cfg.causal else full_mask(s)
+        out = _sdpa(q, k, v, mask, cfg)
+    else:
+        out = _sdpa_chunked(q, k, v, cfg, causal=cfg.causal, window=window,
+                            skip_uncausal=skip_uncausal)
+    out = constrain(out, ("batch", None, "model", None))
+    b = x.shape[0]
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["w_o_out"]
+    return out, (k, v)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype):
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def decode_step(p, cfg, x, cache, pos, *, window=None, theta=None,
+                ring: bool = False):
+    """One-token decode.  x: [B,1,D]; pos: [] int32 (same for all rows).
+
+    Returns (out [B,1,D], new_cache).  ``ring=True`` treats the cache as a
+    circular buffer of the last ``cache_len`` tokens (sliding-window layers
+    cache only the window): writes wrap, and a slot is attendable iff it has
+    been written (``j <= pos`` before the first wrap, everything after).
+    RoPE always uses the true absolute position.
+    """
+    theta = cfg.rope_theta if theta is None else theta
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, theta)
+    t = cache["k"].shape[1]
+    write = jnp.remainder(pos, t) if ring else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, write, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, write, axis=1)
+    j = jnp.arange(t)
+    if ring:
+        allow = (j <= pos) | (pos >= t)
+    else:
+        allow = j <= pos
+        if window is not None:
+            allow &= (pos - j) < window
+    mask = jnp.where(allow, 0.0, NEG)[None, None, None, :]        # [1,1,1,T]
+    out = _sdpa(q, k, v, mask, cfg)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.hd) @ p["w_o_out"]
+    return out, {"k": k, "v": v}

@@ -1,0 +1,61 @@
+"""Shared model primitives: norms, rotary embeddings, initializers.
+
+All parameters are plain pytrees with a *naming convention* that the
+sharding rules in ``repro.distributed.sharding`` pattern-match on:
+
+    w_in   — [d_in, d_out] with d_out tensor-parallel      -> P(fsdp, tp)
+    w_out  — [d_in, d_out] with d_in tensor-parallel       -> P(tp, fsdp)
+    embed  — [vocab, d]                                     -> P(tp, fsdp)
+    *_experts_* — [E, ...]                                  -> P(tp, fsdp, ...)
+    scale/bias/1-D                                          -> replicated
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))                    # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs       # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                             # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def head_rmsnorm(x, scale, eps: float = 1e-6):
+    """QK-norm: RMS norm over the head dim (qwen3/gemma3 style)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda v: jax.nn.gelu(v, approximate=True),
+            "relu": jax.nn.relu}[name]

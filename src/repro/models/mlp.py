@@ -1,0 +1,23 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+
+from ..distributed.sharding import constrain
+from .layers import activation, dense_init
+
+
+def init(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate_in": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up_in": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down_out": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def forward(p, x, act: str = "silu"):
+    g = activation(act)(x @ p["w_gate_in"])
+    h = g * (x @ p["w_up_in"])
+    h = constrain(h, ("batch", None, "model"))
+    return h @ p["w_down_out"]

@@ -1,0 +1,171 @@
+"""Model registry + input specs + jit-able step functions.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStructs for every model input
+(weak-type-correct, shardable, no allocation) — the dry-run lowers directly
+against them.  ``train_step`` fuses loss/grad/AdamW; ``decode_step`` is the
+serving inner loop (one new token against a KV/state cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..optim import adamw_init, adamw_update
+from .transformer import Model
+
+
+def build_model(cfg: ModelConfig, model_axis: int = 16) -> Model:
+    return Model(cfg, model_axis=model_axis)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.params_dtype
+    if shape.kind == "decode":
+        # decode inputs: one token per sequence (cache specs built separately)
+        if cfg.family == "audio":
+            raise ValueError("encoder-only arch has no decode step")
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.family == "audio":
+        return {
+            "features": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        s_img = cfg.frontend_tokens
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s - s_img), jnp.int32),
+            "image_embeds": jax.ShapeDtypeStruct((b, s_img, cfg.d_model), dt),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def demo_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    """Concrete random batch matching input_specs (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    if cfg.family == "audio":
+        return {
+            "features": jnp.asarray(
+                rng.standard_normal((batch, seq, cfg.d_model)), cfg.params_dtype),
+            "mask": jnp.asarray(rng.random((batch, seq)) < max(cfg.mask_ratio, 0.08)),
+            "targets": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        s_img = cfg.frontend_tokens
+        return {
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq - s_img)), jnp.int32),
+            "image_embeds": jnp.asarray(
+                rng.standard_normal((batch, s_img, cfg.d_model)) * 0.02,
+                cfg.params_dtype),
+        }
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, *, lr: float = 3e-4, grad_clip: float = 1.0,
+                    weight_decay: float = 0.1, remat_policy: str = "nothing",
+                    lr_fn=None, microbatch: int = 1):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``microbatch > 1`` scans gradient accumulation over batch slices —
+    per-step activation memory drops by the same factor (the standard
+    fit-in-HBM lever; grads accumulate in f32)."""
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p, b):
+            return model.loss(p, b, remat_policy=remat_policy)
+
+        if microbatch > 1:
+            def split(x):
+                return x.reshape((microbatch, x.shape[0] // microbatch)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def mb_step(acc, mbatch):
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return acc, l
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, losses = jax.lax.scan(mb_step, zeros, mb)
+            grads = jax.tree.map(
+                lambda g, p: (g / microbatch).astype(p.dtype), gsum, params)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        cur_lr = lr_fn(step) if lr_fn is not None else lr
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=cur_lr, weight_decay=weight_decay,
+            grad_clip_norm=grad_clip)
+        return params, opt_state, {"loss": loss, "lr": cur_lr * jnp.ones(())}
+
+    return train_step
+
+
+def make_prefill_step(model: Model, *, remat_policy: str = "nothing"):
+    """Forward only: hidden states for the full prompt (serving prefill)."""
+
+    def prefill_step(params, batch):
+        hidden = model.forward(params, batch, remat_policy=remat_policy)
+        # Last-position logits are what serving returns after prefill.
+        logits = model._logits(params, hidden[:, -1:]).astype(jnp.float32)
+        return logits
+
+    return prefill_step
+
+
+def make_encode_step(model: Model, *, remat_policy: str = "nothing"):
+    """Encoder-only forward (hubert): per-frame logits."""
+
+    def encode_step(params, batch):
+        hidden = model.forward(params, batch, remat_policy=remat_policy)
+        return model._logits(params, hidden).astype(jnp.float32)
+
+    return encode_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return decode_step
+
+
+def init_params(model: Model, seed: int = 0):
+    return model.init(jax.random.PRNGKey(seed))
+
+
+def init_train_state(model: Model, seed: int = 0):
+    params = init_params(model, seed)
+    return params, adamw_init(params)
+
+
+def abstract_params(model: Model):
+    """ShapeDtypeStruct tree of the params — dry-run init (no allocation)."""
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(abstract_p):
+    return jax.eval_shape(lambda p: adamw_init(p), abstract_p)
+
+
+def abstract_cache(model: Model, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))

@@ -1,0 +1,98 @@
+"""Mixture-of-Experts with GShard-style dispatch/combine einsums.
+
+The canonical TPU formulation: tokens are routed in groups; a one-hot
+dispatch tensor [G, S, E, C] scatters tokens to per-expert capacity slots,
+expert FFNs run as one batched einsum over the expert dim, and a combine
+tensor (dispatch weighted by router probs) gathers results back.  Under the
+production mesh the expert dim is sharded over ``model`` (expert
+parallelism) and groups over (pod, data) — the dispatch/combine einsums
+lower to the all-to-all pattern the roofline analysis tracks.
+
+Supports fine-grained MoE (DeepSeekMoE: small d_ff_expert, many experts,
+shared experts always on) and top-k with capacity dropping; ``n_pad``
+extends the expert dim to a multiple of the mesh axis with never-routed
+experts (router logits −inf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import activation, dense_init
+from . import mlp as mlp_mod
+
+
+def padded_experts(n_experts: int, model_axis: int) -> int:
+    return int(np.ceil(n_experts / model_axis) * model_axis)
+
+
+def init(key, cfg, dtype, model_axis: int = 16):
+    e_pad = padded_experts(cfg.n_experts, model_axis)
+    d, f = cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "router_in": dense_init(ks[0], d, e_pad, jnp.float32),
+        "w_experts_gate": (jax.random.normal(ks[1], (e_pad, d, f), jnp.float32) * s).astype(dtype),
+        "w_experts_up": (jax.random.normal(ks[2], (e_pad, d, f), jnp.float32) * s).astype(dtype),
+        "w_experts_down": (jax.random.normal(ks[3], (e_pad, f, d), jnp.float32)
+                           * (1.0 / np.sqrt(f))).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_mod.init(ks[4], d, cfg.n_shared_experts * f, dtype)
+    return p
+
+
+def forward(p, cfg, x, *, model_axis: int = 16):
+    """x: [B, S, D] -> [B, S, D].  Aux losses returned for load balance."""
+    b, s, d = x.shape
+    e_pad = p["router_in"].shape[-1]
+    g_sz = min(cfg.moe_group_size, s)
+    assert (b * s) % g_sz == 0, (b, s, g_sz)
+    g = (b * s) // g_sz
+    xt = x.reshape(g, g_sz, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router_in"])          # [G, S, Epad]
+    if e_pad > cfg.n_experts:
+        pad_mask = jnp.arange(e_pad) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    cap = int(g_sz * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    cap = max(cap, cfg.top_k)
+
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)                # [G, S, K]
+    topv = topv / (topv.sum(-1, keepdims=True) + 1e-9)          # renormalize
+
+    # Capacity assignment: position of each (token, k) within its expert's
+    # queue, computed with a cumulative count over the flattened (S*K) order.
+    onehot = jax.nn.one_hot(topi, e_pad, dtype=jnp.float32)     # [G,S,K,E]
+    flat = onehot.reshape(g, s_k := g_sz * cfg.top_k, e_pad)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat                  # [G,S*K,E]
+    pos = (pos_in_e * flat).sum(-1).reshape(g, g_sz, cfg.top_k)  # [G,S,K]
+    keep = pos < cap
+    pos = jnp.minimum(pos, cap - 1).astype(jnp.int32)
+
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)        # [G,S,K,C]
+    disp = jnp.einsum("gske,gskc,gsk->gsec", onehot, pos_oh,
+                      keep.astype(jnp.float32))                 # [G,S,E,C]
+    comb = jnp.einsum("gsec,gsk,gske->gsec", disp, topv, onehot)
+
+    # Expert compute: [G,S,E,C] x [G,S,D] -> [E, G*C', D] batched FFN.
+    xe = jnp.einsum("gsec,gsd->egcd", disp.astype(x.dtype), xt)  # [E,G,C,D]
+    act = activation(cfg.act)
+    h = act(jnp.einsum("egcd,edf->egcf", xe, p["w_experts_gate"]))
+    h = h * jnp.einsum("egcd,edf->egcf", xe, p["w_experts_up"])
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w_experts_down"])    # [E,G,C,D]
+    y = jnp.einsum("gsec,egcd->gsd", comb.astype(x.dtype), ye)   # [G,S,D]
+    out = y.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_mod.forward(p["shared"], x, cfg.act)
+
+    # Switch-style load-balance aux loss.
+    me = probs.mean(axis=(0, 1))
+    fe = onehot.sum(2).mean(axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(me * fe)
+    return out, aux

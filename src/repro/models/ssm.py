@@ -1,0 +1,155 @@
+"""Mamba2 (SSD) block — chunked parallel scan, TPU-native.
+
+The selective-state-space recurrence
+
+    h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t,      y_t = C_t h_t + D x_t
+
+is evaluated chunkwise (Dao & Gu, 2024): within a chunk the output is a
+masked attention-like score matrix (parallel, MXU-friendly); across chunks a
+``lax.scan`` carries the [H, N, P] state.  Chunks are processed sequentially
+so the per-device peak is one chunk's score tensor (not L²) — the
+long_500k decode cells rely on the O(1)-state decode path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rmsnorm
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_headdim
+
+
+def init(key, cfg, dtype):
+    d = cfg.d_model
+    di = d_inner(cfg)
+    n = cfg.ssm_state
+    h = n_ssm_heads(cfg)
+    k = cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * n
+    return {
+        # order: [z (gate) | x | B | C | dt]
+        "w_in": dense_init(ks[0], d, 2 * di + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (k, conv_ch), jnp.float32)
+                   * (1.0 / np.sqrt(k))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = -exp(A_log) ∈ (-∞,0)
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "w_out": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _split_proj(p, cfg, x):
+    di = d_inner(cfg)
+    n = cfg.ssm_state
+    h = n_ssm_heads(cfg)
+    zxbcdt = x @ p["w_in"]
+    z, xs, b, c, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n],
+                                axis=-1)
+    return z, xs, b, c, dt
+
+
+def _causal_conv(u, w, b):
+    """u: [B, L, C]; w: [K, C] depthwise causal conv."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1]] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(out + b[None, None])
+
+
+def forward(p, cfg, x, chunk: int = 128):
+    """x: [B, L, D] -> [B, L, D]."""
+    bsz, L, _ = x.shape
+    di, n, h, pdim = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg), cfg.ssm_headdim
+    chunk = min(chunk, L)
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+
+    z, xs, bmat, cmat, dt = _split_proj(p, cfg, x)
+    xbc = _causal_conv(jnp.concatenate([xs, bmat, cmat], -1), p["conv_w"], p["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+
+    xh = xs.reshape(bsz, L, h, pdim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])          # [B,L,H]
+    a = -jnp.exp(p["A_log"])                                             # [H]
+    loga = dt * a[None, None]                                            # [B,L,H] ≤ 0
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+
+    # chunked views
+    xc = xh.reshape(bsz, nc, chunk, h, pdim)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    lac = loga.reshape(bsz, nc, chunk, h)
+    bc = bmat.reshape(bsz, nc, chunk, n)
+    cc = cmat.reshape(bsz, nc, chunk, n)
+
+    cum = jnp.cumsum(lac, axis=2)                                        # [B,nc,cl,H]
+    total = cum[:, :, -1]                                                # [B,nc,H]
+
+    def chunk_step(state, inp):
+        xck, dtk, lck, cumk, totk, bk, ck = inp
+        # inter-chunk: y_i += C_i · (exp(cum_i) * state_in)
+        decay_in = jnp.exp(cumk)                                         # [B,cl,H]
+        y_inter = jnp.einsum("bln,bhnp,blh->blhp", ck, state, decay_in)
+        # intra-chunk: scores[i,j] = (C_i·B_j) exp(cum_i − cum_j) dt_j, j ≤ i
+        cb = jnp.einsum("bin,bjn->bij", ck, bk)                          # [B,cl,cl]
+        gap = cumk[:, :, None, :] - cumk[:, None, :, :]                  # [B,i,j,H]
+        i_idx = jnp.arange(xck.shape[1])
+        causal = (i_idx[:, None] >= i_idx[None, :])[None, :, :, None]
+        w = jnp.where(causal, jnp.exp(gap), 0.0) * cb[..., None]         # [B,i,j,H]
+        y_intra = jnp.einsum("bijh,bjh,bjhp->bihp", w, dtk, xck)
+        # state update: S' = exp(total) S + Σ_j exp(total − cum_j) dt_j B_j ⊗ x_j
+        wstate = jnp.exp(totk[:, None] - cumk) * dtk                     # [B,cl,H]
+        s_new = jnp.einsum("bjn,bjh,bjhp->bhnp", bk, wstate, xck)
+        state = jnp.exp(totk)[:, :, None, None] * state + s_new
+        return state, y_inter + y_intra
+
+    state0 = jnp.zeros((bsz, h, n, pdim), jnp.float32)
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, dtc, lac, cum, total, bc, cc))
+    _, ys = jax.lax.scan(chunk_step, state0, inputs)                     # [nc,B,cl,H,P]
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, L, h, pdim)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(bsz, L, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def init_cache(cfg, batch: int, dtype):
+    di, n, h = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg)
+    return {
+        "state": jnp.zeros((batch, h, n, cfg.ssm_headdim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+    }
+
+
+def decode_step(p, cfg, x, cache):
+    """x: [B,1,D] -> ([B,1,D], new_cache).  O(1) state decode."""
+    bsz = x.shape[0]
+    di, n, h, pdim = d_inner(cfg), cfg.ssm_state, n_ssm_heads(cfg), cfg.ssm_headdim
+    z, xs, bmat, cmat, dt = _split_proj(p, cfg, x)
+    xbc = jnp.concatenate([xs, bmat, cmat], -1)                          # [B,1,C]
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)                 # [B,K,C]
+    conv_out = jax.nn.silu((hist * p["conv_w"][None]).sum(1) + p["conv_b"])
+    xs, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    xh = xs.reshape(bsz, h, pdim).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])   # [B,H]
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * a[None])                                       # [B,H]
+    s = cache["state"] * decay[:, :, None, None]
+    s = s + jnp.einsum("bn,bh,bhp->bhnp", bmat.astype(jnp.float32), dt1, xh)
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), s)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    return y @ p["w_out"], {"state": s, "conv": hist[:, 1:]}

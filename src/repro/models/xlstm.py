@@ -1,0 +1,227 @@
+"""xLSTM blocks (Beck et al., 2024): chunked mLSTM + recurrent sLSTM.
+
+mLSTM — matrix-memory cell with exponential input gates and sigmoid forget
+gates, evaluated chunkwise like the SSD scan (parallel intra-chunk scores,
+``lax.scan`` carrying (S [H,K,V], n [H,K], m [H]) across chunks) with
+max-stabilized log-space gating.  Sub-quadratic: the long_500k decode cell
+uses the O(1)-state decode path.
+
+sLSTM — scalar-memory cell with *recurrent* gate connections (block-diagonal
+per head); inherently sequential, so it runs as a ``lax.scan`` over time —
+the paper's own characterization; kept exact rather than approximated.
+
+Block layout follows the paper: mLSTM blocks are pre-up-projected (factor 2,
+no separate FFN — the assigned config's ``d_ff=0``); sLSTM blocks carry a
+post-FFN with proj factor 4/3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def m_init(key, cfg, dtype):
+    d = cfg.d_model
+    du = int(2 * d)                      # up-projection factor 2
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up_in": dense_init(ks[0], d, 2 * du, dtype),        # [x_mlstm | z gate]
+        "w_q_in": dense_init(ks[1], du, du, dtype),
+        "w_k_in": dense_init(ks[2], du, du, dtype),
+        "w_v_in": dense_init(ks[3], du, du, dtype),
+        "w_if": dense_init(ks[4], du, 2 * h, dtype),           # input/forget gates
+        "norm_scale": jnp.zeros((du,), dtype),
+        "w_down_out": dense_init(ks[5], du, d, dtype),
+    }
+
+
+def _m_gates(p, cfg, xu):
+    h = cfg.n_heads
+    gates = (xu @ p["w_if"]).astype(jnp.float32)
+    i_log = gates[..., :h]                                     # pre-activation
+    f_log = jax.nn.log_sigmoid(gates[..., h:])                 # log f ∈ (−∞, 0)
+    return i_log, f_log
+
+
+def m_forward(p, cfg, x, chunk: int = 128):
+    """x: [B, L, D] -> [B, L, D]; chunked parallel mLSTM."""
+    bsz, L, d = x.shape
+    h = cfg.n_heads
+    up = x @ p["w_up_in"]
+    xu, z = jnp.split(up, 2, axis=-1)
+    du = xu.shape[-1]
+    hd = du // h
+    chunk = min(chunk, L)
+    assert L % chunk == 0
+    nc = L // chunk
+
+    q = (xu @ p["w_q_in"]).reshape(bsz, L, h, hd).astype(jnp.float32) / np.sqrt(hd)
+    k = (xu @ p["w_k_in"]).reshape(bsz, L, h, hd).astype(jnp.float32)
+    v = (xu @ p["w_v_in"]).reshape(bsz, L, h, hd).astype(jnp.float32)
+    i_log, f_log = _m_gates(p, cfg, xu)                        # [B,L,H]
+
+    qc = q.reshape(bsz, nc, chunk, h, hd)
+    kc = k.reshape(bsz, nc, chunk, h, hd)
+    vc = v.reshape(bsz, nc, chunk, h, hd)
+    ic = i_log.reshape(bsz, nc, chunk, h)
+    fc = f_log.reshape(bsz, nc, chunk, h)
+    fcum = jnp.cumsum(fc, axis=2)                              # [B,nc,cl,H]
+    ftot = fcum[:, :, -1]
+
+    def chunk_step(carry, inp):
+        S, nvec, m = carry                                     # [B,H,K,V],[B,H,K],[B,H]
+        qk, kk, vk, ik, fck, ftk = inp
+        # log-weights: inter uses m + fcum_i ; intra uses fcum_i − fcum_j + i_j
+        inter_log = fck + m[:, None]                           # [B,cl,H]
+        intra_log = (fck[:, :, None, :] - fck[:, None, :, :]
+                     + ik[:, None, :, :])                      # [B,i,j,H]
+        idx = jnp.arange(qk.shape[1])
+        causal = (idx[:, None] >= idx[None, :])[None, :, :, None]
+        intra_log = jnp.where(causal, intra_log, -jnp.inf)
+        m_new = jnp.maximum(ftk + m, jnp.max(jnp.max(intra_log, 2), 1))  # [B,H]
+        m_i = jnp.maximum(inter_log, jnp.max(intra_log, 2))    # per-row stabilizer [B,cl,H]
+        w_inter = jnp.exp(inter_log - m_i)                     # [B,cl,H]
+        w_intra = jnp.exp(intra_log - m_i[:, :, None, :])      # [B,i,j,H]
+        y_inter = jnp.einsum("blhk,bhkv,blh->blhv", qk, S, w_inter)
+        scores = jnp.einsum("bihk,bjhk->bijh", qk, kk) * w_intra
+        y_intra = jnp.einsum("bijh,bjhv->bihv", scores, vk)
+        n_inter = jnp.einsum("blhk,bhk,blh->blh", qk, nvec, w_inter)
+        n_intra = jnp.einsum("bijh,bjh->bih", scores, jnp.ones_like(ik))
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_i))
+        y = (y_inter + y_intra) / denom[..., None]
+        # carry update in the new stabilizer frame
+        wS = jnp.exp(ftk + m - m_new)                          # [B,H]
+        wk = jnp.exp(ftk[:, None] - fck + ik - m_new[:, None])  # [B,cl,H]
+        S = wS[:, :, None, None] * S + jnp.einsum("bjhk,bjhv,bjh->bhkv", kk, vk, wk)
+        nvec = wS[:, :, None] * nvec + jnp.einsum("bjhk,bjh->bhk", kk, wk)
+        return (S, nvec, m_new), y
+
+    S0 = jnp.zeros((bsz, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((bsz, h, hd), jnp.float32)
+    m0 = jnp.full((bsz, h), -1e30, jnp.float32)
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, ic, fcum, ftot))
+    _, ys = jax.lax.scan(chunk_step, (S0, n0, m0), inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, L, du).astype(x.dtype)
+    y = rmsnorm(y, p["norm_scale"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_down_out"]
+
+
+def m_init_cache(cfg, batch: int):
+    h = cfg.n_heads
+    du = int(2 * cfg.d_model)
+    hd = du // h
+    return {"S": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def m_decode_step(p, cfg, x, cache):
+    bsz = x.shape[0]
+    h = cfg.n_heads
+    up = x @ p["w_up_in"]
+    xu, z = jnp.split(up, 2, axis=-1)
+    du = xu.shape[-1]
+    hd = du // h
+    xu1 = xu[:, 0]
+    q = (xu1 @ p["w_q_in"]).reshape(bsz, h, hd).astype(jnp.float32) / np.sqrt(hd)
+    k = (xu1 @ p["w_k_in"]).reshape(bsz, h, hd).astype(jnp.float32)
+    v = (xu1 @ p["w_v_in"]).reshape(bsz, h, hd).astype(jnp.float32)
+    i_log, f_log = _m_gates(p, cfg, xu[:, 0:1])
+    i_log, f_log = i_log[:, 0], f_log[:, 0]                    # [B,H]
+    m_new = jnp.maximum(f_log + cache["m"], i_log)
+    wS = jnp.exp(f_log + cache["m"] - m_new)
+    wi = jnp.exp(i_log - m_new)
+    S = wS[:, :, None, None] * cache["S"] + jnp.einsum("bhk,bhv,bh->bhkv", k, v, wi)
+    nvec = wS[:, :, None] * cache["n"] + k * wi[:, :, None]
+    num = jnp.einsum("bhk,bhkv->bhv", q, S)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, nvec)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(bsz, 1, du).astype(x.dtype)
+    y = rmsnorm(y, p["norm_scale"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["w_down_out"], {"S": S, "n": nvec, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def s_init(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    dff = int(cfg.xlstm_proj_factor * d)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gates_in": dense_init(ks[0], d, 4 * d, dtype),      # i,f,z,o pre-acts
+        "r_gates": (jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32)
+                    * (1.0 / np.sqrt(hd))).astype(dtype),      # recurrent, per head
+        "norm_scale": jnp.zeros((d,), dtype),
+        "w_ff_gate_in": dense_init(ks[2], d, dff, dtype),
+        "w_ff_up_in": dense_init(ks[3], d, dff, dtype),
+        "w_ff_down_out": dense_init(ks[4], dff, d, dtype),
+    }
+
+
+def s_forward(p, cfg, x):
+    """Sequential sLSTM over time (exact recurrence), then gated FFN."""
+    bsz, L, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    wx = (x @ p["w_gates_in"]).reshape(bsz, L, h, 4 * hd)
+
+    def step(carry, wxt):
+        c, n, m, hprev = carry                                 # [B,H,hd] except m
+        rec = jnp.einsum("bhk,hkg->bhg", hprev, p["r_gates"].astype(jnp.float32))
+        g = wxt.astype(jnp.float32) + rec
+        ig, fg, zg, og = jnp.split(g, 4, axis=-1)              # [B,H,hd]
+        m_new = jnp.maximum(fg + m, ig)
+        i = jnp.exp(ig - m_new)
+        f = jnp.exp(fg + m - m_new)
+        c = f * c + i * jnp.tanh(zg)
+        n = f * n + i
+        hh = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, hh), hh
+
+    zeros = jnp.zeros((bsz, h, hd), jnp.float32)
+    carry0 = (zeros, zeros, jnp.full((bsz, h, hd), -1e30, jnp.float32), zeros)
+    _, hs = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(bsz, L, d).astype(x.dtype)
+    y = rmsnorm(y, p["norm_scale"], cfg.norm_eps)
+    g = jax.nn.gelu(y @ p["w_ff_gate_in"], approximate=True)
+    return (g * (y @ p["w_ff_up_in"])) @ p["w_ff_down_out"]
+
+
+def s_init_cache(cfg, batch: int):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    zeros = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": zeros, "n": zeros,
+            "m": jnp.full((batch, h, hd), -1e30, jnp.float32), "h": zeros}
+
+
+def s_decode_step(p, cfg, x, cache):
+    bsz = x.shape[0]
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    wx = (x[:, 0] @ p["w_gates_in"]).reshape(bsz, h, 4 * hd)
+    rec = jnp.einsum("bhk,hkg->bhg", cache["h"], p["r_gates"].astype(jnp.float32))
+    g = wx.astype(jnp.float32) + rec
+    ig, fg, zg, og = jnp.split(g, 4, axis=-1)
+    m_new = jnp.maximum(fg + cache["m"], ig)
+    i = jnp.exp(ig - m_new)
+    f = jnp.exp(fg + cache["m"] - m_new)
+    c = f * cache["c"] + i * jnp.tanh(zg)
+    n = f * cache["n"] + i
+    hh = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1.0)
+    y = hh.reshape(bsz, 1, cfg.d_model).astype(x.dtype)
+    y = rmsnorm(y, p["norm_scale"], cfg.norm_eps)
+    gf = jax.nn.gelu(y @ p["w_ff_gate_in"], approximate=True)
+    out = (gf * (y @ p["w_ff_up_in"])) @ p["w_ff_down_out"]
+    return out, {"c": c, "n": n, "m": m_new, "h": hh}

@@ -1,0 +1,104 @@
+"""Compressed cross-pod gradient synchronization with error feedback.
+
+The multi-pod design keeps FSDP inside a pod and plain DP across pods
+(DESIGN.md §6), so the inter-pod traffic is exactly one gradient all-reduce
+per step — the slowest link in the system (data-center network between
+pods, not ICI).  This module applies the paper's error-bounded-compression
+idea to that transfer:
+
+  * ``quantize_ef`` — per-tensor error-bounded linear quantization of the
+    gradient to int8 with an *error-feedback* residual carried to the next
+    step (Seide et al.; Karimireddy et al.) — unbiased over time, 4× fewer
+    wire bytes than f32 / 2× fewer than bf16;
+  * ``compressed_psum`` — quantize → psum (int32 accum) → dequantize, for
+    use inside ``shard_map`` over the ``pod`` axis;
+  * host-side NeurLZ gradient archival (``neurlz_grad_archive``) for
+    debugging/async replay: full error-bounded archive of a gradient tree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ef(grads, ef_state, *, bits: int = 8):
+    """Error-feedback quantization.  Returns (q int8 tree, scales, new_ef).
+
+    q = round((g + ef) / scale) with scale = max|g+ef| / qmax per tensor;
+    the quantization error becomes the next step's ef carry.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+
+    def one(g, ef):
+        g32 = g.astype(jnp.float32) + ef
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)) / qmax, 1e-30)
+        q = jnp.clip(jnp.round(g32 / scale), -qmax, qmax).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return q, scale, g32 - deq
+
+    flat, treedef = jax.tree.flatten(grads)
+    efs = treedef.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat, efs)]
+    qs = treedef.unflatten([o[0] for o in out])
+    scales = treedef.unflatten([o[1] for o in out])
+    new_ef = treedef.unflatten([o[2] for o in out])
+    return qs, scales, new_ef
+
+
+def dequantize(qs, scales):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, scales)
+
+
+def init_ef(grads_like):
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compressed_psum(grads, ef_state, axis_name: str, *, bits: int = 8):
+    """Inside shard_map over ``axis_name``: error-feedback int8 all-reduce.
+
+    Wire bytes: int8 payload + one f32 scale per tensor (vs f32/bf16 full
+    gradients) — a 4×/2× collective-term reduction on the pod axis.
+    Accumulation in int32 (no overflow for <=2^23 pods-worth of int8).
+    """
+    qs, scales, new_ef = quantize_ef(grads, ef_state, bits=bits)
+    n = jax.lax.psum(1, axis_name)
+    summed = jax.tree.map(
+        lambda q: jax.lax.psum(q.astype(jnp.int32), axis_name), qs)
+    # scales differ per pod: use the max (conservative; consistent decode)
+    gmax = jax.tree.map(lambda s: jax.lax.pmax(s, axis_name), scales)
+    mean = jax.tree.map(
+        lambda si, s: (si.astype(jnp.float32) * s) / n, summed, gmax)
+    return mean, new_ef
+
+
+def bf16_psum(grads, axis_name: str):
+    """Cheaper baseline: bf16 cross-pod reduce (2× wire reduction)."""
+    return jax.tree.map(
+        lambda g: jax.lax.psum(g.astype(jnp.bfloat16), axis_name)
+        .astype(jnp.float32), grads)
+
+
+def neurlz_grad_archive(grads, rel_eb: float = 1e-3) -> dict:
+    """Host-side error-bounded archive of a gradient tree (paper pipeline
+    applied to gradients; used by the grad-compression benchmark)."""
+    import numpy as np
+
+    from ..compressors import szlike
+
+    total_raw, total_comp = 0, 0
+    arcs = {}
+    flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+    for path, g in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        a = np.asarray(g, dtype=np.float32)
+        if a.ndim < 2 or a.size < 1024:
+            continue
+        arc, _ = szlike.compress(a if a.ndim in (2, 3) else a.reshape(a.shape[0], -1),
+                                 rel_eb=rel_eb,
+                                 config=szlike.SZLikeConfig(predictor="lorenzo"))
+        arcs[key] = arc
+        total_raw += a.nbytes
+        total_comp += arc["nbytes"]
+    return {"arcs": arcs, "raw_bytes": total_raw, "comp_bytes": total_comp,
+            "ratio": total_raw / max(total_comp, 1)}

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step index)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.0):
+    """Cosine annealing from ``base_lr`` to ``base_lr * min_frac`` — the
+    paper's enhancer schedule (initial 1e-2, cosine over 100 epochs)."""
+    def lr(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / max(total_steps, 1)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * (min_frac + (1.0 - min_frac) * cos)
+    return lr
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_frac: float = 0.1):
+    """Linear warmup then cosine decay — the LM trainer schedule."""
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1.0 - min_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return lr

@@ -1,0 +1,73 @@
+"""Round-trip + hard-error-bound tests for the conventional compressors."""
+import numpy as np
+import pytest
+
+from repro import compressors as C
+
+
+def smooth_field(shape, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape)
+    for ax in range(len(shape)):
+        x = np.cumsum(x, axis=ax)
+    x /= max(np.abs(x).max(), 1e-9)
+    return x.astype(dtype)
+
+
+COMPRESSORS = ["szlike", "szlike-lorenzo", "zfplike"]
+
+
+@pytest.mark.parametrize("comp", COMPRESSORS)
+@pytest.mark.parametrize("rel_eb", [1e-2, 1e-3])
+def test_roundtrip_bound_3d(comp, rel_eb):
+    x = smooth_field((20, 24, 18))
+    arc, rec = C.compress(x, rel_eb, compressor=comp)
+    dec = C.decompress(arc)
+    assert np.array_equal(rec, dec), "encoder rec must equal decoder output"
+    err = np.abs(dec.astype(np.float64) - x.astype(np.float64)).max()
+    assert err <= arc["abs_eb"]
+    assert arc["nbytes"] < x.nbytes  # actually compresses
+
+
+@pytest.mark.parametrize("comp", COMPRESSORS)
+def test_roundtrip_2d(comp):
+    x = smooth_field((37, 41))
+    arc, rec = C.compress(x, 1e-3, compressor=comp)
+    dec = C.decompress(arc)
+    assert np.abs(dec.astype(np.float64) - x).max() <= arc["abs_eb"]
+
+
+@pytest.mark.parametrize("comp", COMPRESSORS)
+def test_fp64(comp):
+    x = smooth_field((16, 20, 14), dtype=np.float64)
+    arc, rec = C.compress(x, 1e-6, compressor=comp)
+    dec = C.decompress(arc)
+    assert dec.dtype == np.float64
+    assert np.abs(dec - x).max() <= arc["abs_eb"]
+
+
+def test_compression_ratio_ordering():
+    """Looser bounds must compress better."""
+    x = smooth_field((32, 32, 32))
+    sizes = []
+    for eb in (1e-2, 1e-3, 1e-4):
+        arc, _ = C.compress(x, eb, compressor="szlike")
+        sizes.append(arc["nbytes"])
+    assert sizes[0] < sizes[1] < sizes[2]
+
+
+def test_constant_field():
+    x = np.full((8, 8, 8), 3.25, np.float32)
+    arc, rec = C.compress(x, 1e-3, compressor="szlike")
+    dec = C.decompress(arc)
+    assert np.abs(dec - x).max() <= arc["abs_eb"]
+
+
+def test_nan_handling():
+    x = smooth_field((8, 10, 8))
+    x[2, 3, 4] = np.nan
+    arc, rec = C.compress(x, 1e-2, compressor="szlike")
+    dec = C.decompress(arc)
+    assert np.isnan(dec[2, 3, 4])
+    finite = np.isfinite(x)
+    assert np.abs(dec[finite] - x[finite]).max() <= arc["abs_eb"]

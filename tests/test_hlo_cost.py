@@ -1,0 +1,52 @@
+"""The loop-aware HLO analyzer against graphs with known FLOPs."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_cost
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_plain_matmul_exact():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    c = _compile(lambda a, b: a @ b, a, b)
+    r = hlo_cost.analyze(c.as_text())
+    assert r["flops"] == 2 * 128 * 256 * 64
+
+
+def test_scan_multiplies_trip_count():
+    def g(x, ws):
+        def step(x, w):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(step, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)
+    c = _compile(g, x, ws)
+    r = hlo_cost.analyze(c.as_text())
+    exp = 12 * 2 * 64 * 64 * 64
+    assert 0.95 * exp <= r["flops"] <= 1.3 * exp
+    # XLA's own analysis counts the body once - ours must exceed it
+    assert r["flops"] > (c.cost_analysis() or {}).get("flops", 0) * 5
+
+
+def test_nested_scan():
+    def g(x, ws):
+        def outer(x, w):
+            def inner(x, _):
+                return jnp.sin(x) @ w, None
+            y, _ = jax.lax.scan(inner, x, None, length=4)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 32, 32), jnp.float32)
+    c = _compile(g, x, ws)
+    r = hlo_cost.analyze(c.as_text())
+    exp = 3 * 4 * 2 * 32 * 32 * 32
+    assert 0.9 * exp <= r["flops"] <= 1.6 * exp

@@ -1,0 +1,72 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("shape", [(8, 16, 16), (24, 40, 33), (16, 8, 128),
+                                   (5, 30, 17)])
+@pytest.mark.parametrize("eb", [0.1, 1e-3])
+def test_lorenzo_fwd_matches_ref(shape, eb):
+    x = np.cumsum(RNG.standard_normal(shape), axis=0).astype(np.float32)
+    d, rec = ops.lorenzo_quantize(x, eb)
+    d_ref, rec_ref = ref.lorenzo3d_fwd_ref(jnp.asarray(x), eb)
+    assert np.array_equal(np.asarray(d), np.asarray(d_ref))
+    assert np.allclose(np.asarray(rec), np.asarray(rec_ref))
+
+
+@pytest.mark.parametrize("shape", [(8, 16, 16), (12, 24, 20)])
+def test_lorenzo_inverse_roundtrip(shape):
+    eb = 0.01
+    x = np.cumsum(RNG.standard_normal(shape), axis=1).astype(np.float32)
+    d, rec = ops.lorenzo_quantize(x, eb)
+    q = ops.lorenzo_dequantize(d, eb)
+    # inverse reproduces the fused-kernel reconstruction
+    assert np.allclose(np.asarray(q), np.asarray(rec), atol=1e-6)
+    assert np.abs(np.asarray(q) - x).max() <= eb * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("shape", [(4, 16, 16), (16, 40, 33)])
+@pytest.mark.parametrize("mode", [(True, True), (True, False), (False, False)])
+def test_fused_enhance_matches_ref(shape, mode):
+    regulated, strict = mode
+    eb = 0.05
+    z = RNG.standard_normal(shape).astype(np.float32)
+    dec = RNG.standard_normal(shape).astype(np.float32)
+    orig = (dec + RNG.uniform(-eb, eb, shape)).astype(np.float32)
+    out, mask = ops.enhance(z, dec, orig, eb, regulated=regulated, strict=strict)
+    out_r, mask_r = ref.fused_enhance_ref(jnp.asarray(z), jnp.asarray(dec),
+                                          jnp.asarray(orig), eb,
+                                          regulated=regulated, strict=strict)
+    # 1-ulp differences possible (sigmoid fusion); mask knife-edges likewise
+    assert np.allclose(np.asarray(out), np.asarray(out_r), rtol=2e-5, atol=1e-6)
+    assert (np.asarray(mask) != np.asarray(mask_r)).mean() < 1e-2
+
+
+def test_fused_enhance_strict_bound():
+    eb = 0.05
+    shape = (8, 32, 32)
+    z = RNG.standard_normal(shape).astype(np.float32) * 5
+    dec = RNG.standard_normal(shape).astype(np.float32)
+    orig = (dec + RNG.uniform(-eb, eb, shape)).astype(np.float32)
+    out, _ = ops.enhance(z, dec, orig, eb, regulated=True, strict=True)
+    assert np.abs(np.asarray(out) - orig).max() <= eb * (1 + 1e-5)
+
+
+@pytest.mark.parametrize("hw", [(16, 16), (24, 20), (25, 33), (31, 17)])
+@pytest.mark.parametrize("cin,cout", [(1, 4), (4, 6), (8, 8), (12, 4)])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv3x3_sweep(hw, cin, cout, stride):
+    h, w_ = hw
+    x = RNG.standard_normal((2, h, w_, cin)).astype(np.float32)
+    w = (RNG.standard_normal((3, 3, cin, cout)) * 0.2).astype(np.float32)
+    b = (RNG.standard_normal((cout,)) * 0.1).astype(np.float32)
+    y = ops.conv3x3(x, w, b, stride=stride)
+    yr = ref.conv2d3x3_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                           stride=stride)
+    assert y.shape == yr.shape
+    assert np.allclose(np.asarray(y), np.asarray(yr), atol=1e-5)

@@ -1,0 +1,91 @@
+"""End-to-end NeurLZ: the paper's pipeline with all regulation modes."""
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core import metrics
+from repro.data import fields as F
+
+FIELDS = F.make_fields("nyx", shape=(24, 40, 40), seed=3)
+SUB = {k: FIELDS[k] for k in ["temperature", "dark_matter_density"]}
+
+
+def _compress(mode, cross=False, epochs=3, **kw):
+    cfg = core.NeurLZConfig(
+        epochs=epochs, mode=mode,
+        cross_field={"temperature": ("dark_matter_density",)} if cross else {},
+        **kw)
+    return core.compress(SUB, rel_eb=1e-3, config=cfg)
+
+
+def test_strict_mode_respects_1x_bound():
+    arc = _compress("strict")
+    dec = core.decompress(arc)
+    for name, x in SUB.items():
+        eb = arc["fields"][name]["abs_eb"]
+        assert np.abs(dec[name].astype(np.float64) - x.astype(np.float64)).max() <= eb
+
+
+def test_relaxed_mode_respects_2x_bound():
+    arc = _compress("relaxed")
+    dec = core.decompress(arc)
+    for name, x in SUB.items():
+        eb = arc["fields"][name]["abs_eb"]
+        err = np.abs(dec[name].astype(np.float64) - x.astype(np.float64)).max()
+        assert err <= 2 * eb
+        assert "outliers" not in arc["fields"][name]  # no coord storage
+
+
+def test_enhancement_never_worse_in_strict_mode():
+    """Strict mode replaces bad points with decompressed values, so the max
+    error can't exceed the conventional compressor's."""
+    import repro.compressors as C
+
+    arc = _compress("strict")
+    dec = core.decompress(arc)
+    for name, x in SUB.items():
+        conv = C.decompress(arc["fields"][name]["conv"])
+        p_conv = metrics.psnr(x, conv)
+        p_enh = metrics.psnr(x, dec[name])
+        assert p_enh >= p_conv - 0.5  # tolerance for tiny epochs
+
+
+def test_cross_field_uses_aux_channels():
+    arc = _compress("strict", cross=True)
+    e = arc["fields"]["temperature"]
+    assert e["aux"] == ["dark_matter_density"]
+    assert e["net"]["c_in"] == 2
+    dec = core.decompress(arc)
+    eb = e["abs_eb"]
+    assert np.abs(dec["temperature"].astype(np.float64)
+                  - SUB["temperature"].astype(np.float64)).max() <= eb
+
+
+def test_decode_is_deterministic():
+    arc = _compress("strict")
+    d1 = core.decompress(arc)
+    d2 = core.decompress(arc)
+    for k in d1:
+        assert np.array_equal(d1[k], d2[k])
+
+
+def test_bitrate_accounting_consistent():
+    arc = _compress("strict")
+    for name, x in SUB.items():
+        br = arc["bitrate"][name]
+        assert br["total_bytes"] == (br["conv_bytes"] + br["weight_bytes"]
+                                     + br["outlier_bytes"])
+        assert br["bitrate"] > 0
+        # weights in the archive: ~3k params * 4B, zstd'd
+        assert 4000 < br["weight_bytes"] < 16000
+
+
+def test_archive_file_roundtrip(tmp_path):
+    arc = _compress("strict")
+    path = str(tmp_path / "block.nlz")
+    nbytes = core.save(path, arc)
+    assert nbytes > 0
+    arc2 = core.load(path)
+    d1, d2 = core.decompress(arc), core.decompress(arc2)
+    for k in d1:
+        assert np.array_equal(d1[k], d2[k])

@@ -1,0 +1,87 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import compressors as C
+from repro.compressors import outliers as OC
+from repro.compressors.szlike import lorenzo_delta, lorenzo_undelta
+from repro.compressors.zfplike import _fwd_lift, _inv_lift
+from repro.core import archive as A
+
+import jax.numpy as jnp
+
+
+fields = st.integers(0, 10_000).map(
+    lambda seed: _mk_field(seed))
+
+
+def _mk_field(seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(4, 14, size=3))
+    x = rng.standard_normal(shape)
+    if seed % 3 == 0:  # spiky fields too
+        x[tuple(rng.integers(0, s) for s in shape)] *= 100.0
+    return np.cumsum(x, axis=0).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(fields, st.sampled_from([1e-2, 1e-3, 1e-4]),
+       st.sampled_from(["szlike", "szlike-lorenzo", "zfplike"]))
+def test_error_bound_invariant(x, eb, comp):
+    """|decompress(compress(x)) - x| <= eb, always, for every compressor."""
+    arc, rec = C.compress(x, eb, compressor=comp)
+    dec = C.decompress(arc)
+    assert np.abs(dec.astype(np.float64) - x.astype(np.float64)).max() <= arc["abs_eb"]
+    assert np.array_equal(rec, dec)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_lorenzo_delta_exact_inverse(seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-2**15, 2**15, size=(6, 7, 5)), jnp.int32)
+    assert np.array_equal(np.asarray(lorenzo_undelta(lorenzo_delta(q))),
+                          np.asarray(q))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_zfp_lift_near_inverse(seed):
+    """ZFP's integer lifting loses a few LSBs to the arithmetic shifts (it is
+    *near*-orthogonal, not bit-exact — zfp itself never relies on exactness
+    since coefficients are quantized).  The invariant: fwd∘inv differs by a
+    bounded number of lattice steps, tiny relative to the 2^22 magnitudes —
+    and the *compressor-level* error bound (test above) absorbs it via the
+    correction pass."""
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.integers(-2**22, 2**22, size=(10, 4, 4, 4)), jnp.int32)
+    w = v
+    for ax in (1, 2, 3):
+        w = _fwd_lift(w, ax)
+    for ax in (3, 2, 1):
+        w = _inv_lift(w, ax)
+    assert int(np.abs(np.asarray(w) - np.asarray(v)).max()) <= 64
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.001, 0.3))
+def test_outlier_codec_roundtrip(seed, density):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(3, 20, size=3))
+    mask = rng.random(shape) < density
+    blob = OC.encode_outliers(mask)
+    assert np.array_equal(OC.decode_outliers(blob), mask)
+    assert blob["packed_bits"] == mask.sum() * OC.coord_bits(shape)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000))
+def test_archive_msgpack_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    obj = {"a": rng.standard_normal((3, 4)).astype(np.float32),
+           "b": {"c": int(rng.integers(0, 100)), "d": [1.5, "x", b"bytes"]},
+           "e": rng.integers(0, 100, (5,)).astype(np.int32)}
+    back = A.loads(A.dumps(obj))
+    assert np.array_equal(back["a"], obj["a"])
+    assert np.array_equal(back["e"], obj["e"])
+    assert back["b"]["c"] == obj["b"]["c"]

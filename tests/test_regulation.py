@@ -1,0 +1,32 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import regulation as R
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_strict_patch_always_within_bound(seed):
+    rng = np.random.default_rng(seed)
+    eb = float(rng.uniform(1e-4, 1e-1))
+    orig = rng.standard_normal((6, 8, 8)).astype(np.float32)
+    decomp = orig + rng.uniform(-eb, eb, orig.shape).astype(np.float32)
+    resid_norm = rng.uniform(-1, 1, orig.shape).astype(np.float32)
+    enh = R.enhance(decomp, resid_norm, eb)
+    mask = R.outlier_mask(orig, enh, eb)
+    final = R.apply_strict(enh, decomp, mask)
+    chk = R.check_bound(orig, final, eb, "strict")
+    assert chk["ok"], chk
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_regulated_enhance_within_2x(seed):
+    rng = np.random.default_rng(seed)
+    eb = float(rng.uniform(1e-4, 1e-1))
+    orig = rng.standard_normal((6, 8, 8)).astype(np.float64)
+    decomp = orig + rng.uniform(-eb, eb, orig.shape)
+    resid_norm = np.tanh(rng.standard_normal(orig.shape))  # in (-1, 1)
+    enh = R.enhance(decomp, resid_norm, eb, out_dtype=np.float64)
+    chk = R.check_bound(orig, enh, eb, "relaxed")
+    assert chk["ok"], chk

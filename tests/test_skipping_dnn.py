@@ -1,0 +1,55 @@
+"""The paper's enhancer network: size claim, regulation range, ablations."""
+import jax
+import numpy as np
+
+from repro.core import skipping_dnn as SD
+
+
+def test_param_count_matches_paper_claim():
+    """~3,000 params for the 10-layer single-field net (paper §3.2.2)."""
+    cfg = SD.SkippingDNNConfig(c_in=1)
+    params = SD.init_params(jax.random.PRNGKey(0), cfg)
+    n = SD.param_count(params)
+    assert 2500 <= n <= 3500, n
+
+
+def test_cross_field_only_adds_input_channel_params():
+    p1 = SD.init_params(jax.random.PRNGKey(0), SD.SkippingDNNConfig(c_in=1))
+    p2 = SD.init_params(jax.random.PRNGKey(0), SD.SkippingDNNConfig(c_in=2))
+    assert SD.param_count(p2) - SD.param_count(p1) == 9 * 4  # 3x3 conv, 4 ch
+
+
+def test_regulated_output_in_unit_range():
+    cfg = SD.SkippingDNNConfig(c_in=1, regulated=True)
+    params = SD.init_params(jax.random.PRNGKey(1), cfg)
+    x = np.random.default_rng(0).standard_normal((3, 40, 40, 1)).astype(np.float32) * 10
+    out = np.asarray(SD.forward(params, x, regulated=True, skip=True))
+    assert out.shape == (3, 40, 40, 1)
+    # closed interval: sigmoid saturates to exactly 0/1 in fp32 for large
+    # |z|, giving residuals of exactly ±eb — still within the 2x bound
+    assert np.all(out >= -1.0) and np.all(out <= 1.0)
+
+
+def test_unregulated_output_unbounded_head():
+    cfg = SD.SkippingDNNConfig(c_in=1, regulated=False)
+    params = SD.init_params(jax.random.PRNGKey(1), cfg)
+    x = np.random.default_rng(0).standard_normal((2, 32, 32, 1)).astype(np.float32)
+    out = np.asarray(SD.forward(params, x, regulated=False, skip=True))
+    assert np.isfinite(out).all()
+
+
+def test_arbitrary_hw_padding():
+    cfg = SD.SkippingDNNConfig(c_in=1)
+    params = SD.init_params(jax.random.PRNGKey(0), cfg)
+    for hw in [(17, 23), (16, 16), (50, 33)]:
+        x = np.zeros((1, *hw, 1), np.float32)
+        out = SD.forward(params, x, regulated=True, skip=True)
+        assert out.shape == (1, *hw, 1)
+
+
+def test_non_skipping_variant_runs():
+    cfg = SD.SkippingDNNConfig(c_in=1, skip=False)
+    params = SD.init_params(jax.random.PRNGKey(0), cfg)
+    x = np.zeros((1, 32, 32, 1), np.float32)
+    out = SD.forward(params, x, regulated=True, skip=False)
+    assert out.shape == (1, 32, 32, 1)
