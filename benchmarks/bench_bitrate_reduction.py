@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from . import common
 from repro.data import fields as F

@@ -74,3 +74,29 @@ def csv_row(name: str, us_per_call: float, derived: str):
 
 def bench_fields(dataset="nyx", shape=(32, 48, 48), seed=2):
     return F.make_fields(dataset, shape=shape, seed=seed)
+
+
+def snapshot_fields(num_fields: int, shape=(16, 32, 32), dataset="nyx"):
+    """A multi-field snapshot with ``num_fields`` fields (multiple correlated
+    blocks when the dataset has fewer native fields) — the batched engine's
+    unit of work."""
+    out = {}
+    seed = 2
+    while len(out) < num_fields:
+        for name, x in F.make_fields(dataset, shape=shape, seed=seed).items():
+            if len(out) < num_fields:
+                out[f"{name}_s{seed}"] = x
+        seed += 1
+    return out
+
+
+def timed_compress(fields_dict, rel_eb, cfg, repeats: int = 3):
+    """Best-of-``repeats`` wall-clock for ``core.compress`` (first call
+    outside the timer warms the jit caches)."""
+    core.compress(fields_dict, rel_eb=rel_eb, config=cfg)
+    best, arc = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.time()
+        arc = core.compress(fields_dict, rel_eb=rel_eb, config=cfg)
+        best = min(best, time.time() - t0)
+    return best, arc

@@ -27,28 +27,49 @@ MODULES = [
 ]
 
 
+# CI smoke subset: the kernel validations plus the engine-comparison rows of
+# the scalability bench, at tiny-field settings (see each module's smoke path).
+MODULES_SMOKE = [
+    "bench_kernels",
+    "bench_scalability",
+]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-field CI profile (fast, regression-only)")
     ap.add_argument("--only", default=None,
                     help="run a single benchmark module")
     args = ap.parse_args()
 
     failures = 0
-    for name in MODULES:
+    ran = 0
+    modules = MODULES_SMOKE if args.smoke else MODULES
+    for name in modules:
         if args.only and args.only not in name:
             continue
+        ran += 1
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
         try:
-            mod.run(full=args.full)
+            import inspect
+            kwargs = {"full": args.full}
+            if "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = args.smoke
+            mod.run(**kwargs)
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"# {name} FAILED:\n{traceback.format_exc()}",
                   file=sys.stderr, flush=True)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if args.only and ran == 0:
+        print(f"# --only {args.only!r} matched no module in "
+              f"{modules}", file=sys.stderr)
+        sys.exit(2)
     if failures:
         sys.exit(1)
 

@@ -28,6 +28,10 @@ def main():
                     choices=["strict", "relaxed", "unregulated"])
     ap.add_argument("--compressor", default="szlike",
                     choices=["szlike", "szlike-lorenzo", "zfplike"])
+    ap.add_argument("--engine", default="batched",
+                    choices=["serial", "batched"],
+                    help="batched = multi-field fused-dispatch engine "
+                         "(bit-identical archives to serial)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -36,9 +40,10 @@ def main():
     cross = F.DEFAULT_CROSS_FIELD[args.dataset]
 
     cfg = core.NeurLZConfig(compressor=args.compressor, mode=args.mode,
-                            epochs=args.epochs, cross_field=cross)
+                            epochs=args.epochs, cross_field=cross,
+                            engine=args.engine)
     print(f"[compress] {args.dataset} {shape} eb={args.eb} mode={args.mode} "
-          f"epochs={args.epochs} cross_field=on")
+          f"epochs={args.epochs} cross_field=on engine={args.engine}")
     arc = core.compress(flds, rel_eb=args.eb, config=cfg)
 
     path = args.out or os.path.join(tempfile.gettempdir(),
@@ -46,7 +51,7 @@ def main():
     nbytes = core.save(path, arc)
     print(f"[archive]  {path}  ({nbytes/2**20:.2f} MiB on disk)")
 
-    dec = core.decompress(core.load(path))
+    dec = core.decompress(core.load(path), engine=args.engine)
     raw = sum(v.nbytes for v in flds.values())
     total = sum(arc["bitrate"][n]["total_bytes"] for n in flds)
     print(f"[totals]   raw {raw/2**20:.1f} MiB -> {total/2**20:.2f} MiB "

@@ -1,5 +1,4 @@
 """Summarize the §Perf iteration records (experiments/perf + baselines)."""
-import glob
 import json
 
 CELLS = {

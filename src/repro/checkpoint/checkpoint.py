@@ -23,7 +23,8 @@ import time
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+from ..compressors import codec
 
 
 def _flatten(tree, prefix="", out=None):
@@ -70,7 +71,7 @@ def _pack_arrays(flat: dict, level: int = 3, lossy_eb: float | None = None) -> b
             entries[k] = {"kind": "raw", "dtype": str(a.dtype),
                           "shape": list(a.shape), "data": a.tobytes()}
     payload = msgpack.packb(entries, use_bin_type=True)
-    return zstd.ZstdCompressor(level=level).compress(payload)
+    return codec.compress(payload, level)[0]
 
 
 def _arc_to_bytes(arc: dict) -> bytes:
@@ -79,7 +80,9 @@ def _arc_to_bytes(arc: dict) -> bytes:
 
 
 def _unpack_arrays(data: bytes) -> dict:
-    payload = zstd.ZstdDecompressor().decompress(data)
+    # Checkpoint blobs are headerless; the codec is sniffed from the stream
+    # (zstd frame magic vs zlib), so checkpoints move between installs.
+    payload = codec.decompress_sniffed(data)
     entries = msgpack.unpackb(payload, raw=False, strict_map_key=False)
     out = {}
     for k, e in entries.items():

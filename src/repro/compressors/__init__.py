@@ -8,7 +8,7 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from . import entropy, outliers, szlike, zfplike  # noqa: E402,F401
+from . import codec, entropy, outliers, szlike, zfplike  # noqa: E402,F401
 from .quantize import abs_bound_from_rel  # noqa: E402,F401
 
 

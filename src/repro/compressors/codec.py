@@ -1,0 +1,81 @@
+"""Byte-stream codec layer: zstandard when available, stdlib zlib fallback.
+
+Every compressed blob in the system (entropy-coded quantization streams,
+enhancer weights, outlier coordinates, unpredictable masks, checkpoints)
+routes through this module so that ``zstandard`` is a genuinely *optional*
+dependency: a box without the wheel still produces valid archives (zlib) and
+can decode any zlib-coded archive.  The codec name travels in the blob header
+(``"codec"`` key) so either side can decode; legacy blobs without the key are
+assumed zstd, which matches every archive written before the key existed.
+
+Raw byte streams with no header (checkpoint files) are decoded by sniffing
+the zstd frame magic — zlib streams can never start with it.
+"""
+from __future__ import annotations
+
+import os
+import zlib
+
+try:
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover - exercised on boxes without the wheel
+    _zstd = None
+
+HAVE_ZSTD = _zstd is not None
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+# Resolution order: explicit arg > set_default_codec() > $REPRO_CODEC > best.
+_override: str | None = None
+
+
+def available_codecs() -> tuple[str, ...]:
+    return ("zstd", "zlib") if HAVE_ZSTD else ("zlib",)
+
+
+def default_codec() -> str:
+    name = _override or os.environ.get("REPRO_CODEC")
+    if name:
+        _check(name)
+        return name
+    return "zstd" if HAVE_ZSTD else "zlib"
+
+
+def set_default_codec(name: str | None) -> None:
+    """Force a codec process-wide (``None`` restores auto-selection)."""
+    global _override
+    if name is not None:
+        _check(name)
+    _override = name
+
+
+def _check(name: str) -> None:
+    if name not in ("zstd", "zlib"):
+        raise ValueError(f"unknown codec {name!r} (want 'zstd' or 'zlib')")
+    if name == "zstd" and not HAVE_ZSTD:
+        raise ImportError(
+            "codec 'zstd' requested but the zstandard package is not "
+            "installed; pip install 'repro-neurlz[zstd]' or use codec='zlib'")
+
+
+def compress(data: bytes, level: int = 9, codec: str | None = None
+             ) -> tuple[bytes, str]:
+    """Compress ``data``; returns ``(payload, codec_name)`` for the header."""
+    name = codec or default_codec()
+    _check(name)
+    if name == "zstd":
+        return _zstd.ZstdCompressor(level=level).compress(data), "zstd"
+    return zlib.compress(data, min(level, 9)), "zlib"
+
+
+def decompress(payload: bytes, codec: str = "zstd") -> bytes:
+    _check(codec)
+    if codec == "zstd":
+        return _zstd.ZstdDecompressor().decompress(payload)
+    return zlib.decompress(payload)
+
+
+def decompress_sniffed(payload: bytes) -> bytes:
+    """Decode a headerless stream by sniffing the zstd frame magic."""
+    if payload[:4] == _ZSTD_MAGIC:
+        return decompress(payload, "zstd")
+    return decompress(payload, "zlib")

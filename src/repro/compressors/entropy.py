@@ -13,7 +13,8 @@ the idealized rate alongside the *real achieved* zstd bytes.
 from __future__ import annotations
 
 import numpy as np
-import zstandard as zstd
+
+from . import codec
 
 _ZSTD_LEVEL = 9
 
@@ -34,17 +35,18 @@ def encode_codes(codes: np.ndarray, level: int = _ZSTD_LEVEL) -> dict:
     """Entropy-encode an integer code stream.  Returns a serializable blob."""
     codes = np.ascontiguousarray(np.asarray(codes))
     narrow, dt = _narrow(codes.ravel())
-    payload = zstd.ZstdCompressor(level=level).compress(narrow.tobytes())
+    payload, cname = codec.compress(narrow.tobytes(), level)
     return {
         "dtype": dt,
         "shape": list(codes.shape),
         "payload": payload,
+        "codec": cname,
         "nbytes": len(payload),
     }
 
 
 def decode_codes(blob: dict) -> np.ndarray:
-    raw = zstd.ZstdDecompressor().decompress(blob["payload"])
+    raw = codec.decompress(blob["payload"], blob.get("codec", "zstd"))
     arr = np.frombuffer(raw, dtype=blob["dtype"]).reshape(blob["shape"])
     return arr.astype(np.int32)
 
@@ -52,17 +54,18 @@ def decode_codes(blob: dict) -> np.ndarray:
 def encode_floats(values: np.ndarray, level: int = _ZSTD_LEVEL) -> dict:
     """Lossless float blob (literals, DNN weights)."""
     values = np.ascontiguousarray(np.asarray(values))
-    payload = zstd.ZstdCompressor(level=level).compress(values.tobytes())
+    payload, cname = codec.compress(values.tobytes(), level)
     return {
         "dtype": str(values.dtype),
         "shape": list(values.shape),
         "payload": payload,
+        "codec": cname,
         "nbytes": len(payload),
     }
 
 
 def decode_floats(blob: dict) -> np.ndarray:
-    raw = zstd.ZstdDecompressor().decompress(blob["payload"])
+    raw = codec.decompress(blob["payload"], blob.get("codec", "zstd"))
     return np.frombuffer(raw, dtype=blob["dtype"]).reshape(blob["shape"]).copy()
 
 

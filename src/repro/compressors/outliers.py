@@ -13,7 +13,8 @@ from __future__ import annotations
 import math
 
 import numpy as np
-import zstandard as zstd
+
+from . import codec
 
 
 def coord_bits(shape: tuple[int, ...]) -> int:
@@ -48,12 +49,13 @@ def encode_outliers(mask: np.ndarray) -> dict:
     # Delta encoding of sorted indices keeps the packed stream zstd-friendly.
     deltas = np.diff(flat, prepend=np.uint64(0)) if flat.size else flat
     packed = _pack_bits(deltas, width)
-    payload = zstd.ZstdCompressor(level=9).compress(packed)
+    payload, cname = codec.compress(packed, 9)
     return {
         "shape": list(shape),
         "count": int(flat.size),
         "width": width,
         "payload": payload,
+        "codec": cname,
         # Paper-formula storage cost (bits): count * B̄.
         "packed_bits": int(flat.size) * width,
         "nbytes": len(payload),
@@ -62,7 +64,7 @@ def encode_outliers(mask: np.ndarray) -> dict:
 
 def decode_outliers(blob: dict) -> np.ndarray:
     shape = tuple(blob["shape"])
-    packed = zstd.ZstdDecompressor().decompress(blob["payload"])
+    packed = codec.decompress(blob["payload"], blob.get("codec", "zstd"))
     deltas = _unpack_bits(packed, blob["width"], blob["count"])
     flat = np.cumsum(deltas, dtype=np.uint64)
     mask = np.zeros(int(np.prod(shape)), dtype=bool)

@@ -30,9 +30,8 @@ import math
 
 import jax.numpy as jnp
 import numpy as np
-import zstandard as zstd
 
-from . import entropy
+from . import codec, entropy
 from .quantize import CODE_CAP, abs_bound_from_rel
 
 _INTERNAL = jnp.float64 if jnp.array(0.0, jnp.float64).dtype == jnp.float64 else jnp.float32
@@ -89,12 +88,13 @@ def _quantize_phase(values, pred, eb, out_dtype):
 
 def _encode_mask(mask: np.ndarray, level: int) -> dict:
     packed = np.packbits(mask.ravel())
-    payload = zstd.ZstdCompressor(level=level).compress(packed.tobytes())
-    return {"count": int(mask.size), "payload": payload, "nbytes": len(payload)}
+    payload, cname = codec.compress(packed.tobytes(), level)
+    return {"count": int(mask.size), "payload": payload, "codec": cname,
+            "nbytes": len(payload)}
 
 
 def _decode_mask(blob: dict) -> np.ndarray:
-    raw = zstd.ZstdDecompressor().decompress(blob["payload"])
+    raw = codec.decompress(blob["payload"], blob.get("codec", "zstd"))
     bits = np.unpackbits(np.frombuffer(raw, dtype=np.uint8))[: blob["count"]]
     return bits.astype(bool)
 

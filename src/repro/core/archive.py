@@ -11,7 +11,8 @@ import io
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+from ..compressors import codec
 
 
 def _default(obj):
@@ -54,7 +55,9 @@ def load(path: str):
 
 
 def pack_weights(params_tree, dtype: str = "float32") -> dict:
-    """Flatten an enhancer param tree into one zstd blob (archive payload)."""
+    """Flatten an enhancer param tree into one compressed blob (archive
+    payload).  The codec name rides in the header so a zlib-only decoder can
+    read archives written with zstd and vice versa."""
     import jax
 
     leaves, treedef = jax.tree.flatten(params_tree)
@@ -62,11 +65,12 @@ def pack_weights(params_tree, dtype: str = "float32") -> dict:
     buf = io.BytesIO()
     for a in arrs:
         buf.write(a.tobytes())
-    payload = zstd.ZstdCompressor(level=9).compress(buf.getvalue())
+    payload, cname = codec.compress(buf.getvalue(), 9)
     return {
         "dtype": dtype,
         "shapes": [list(a.shape) for a in arrs],
         "payload": payload,
+        "codec": cname,
         "nbytes": len(payload),
         "raw_nbytes": sum(a.nbytes for a in arrs),
         "n_params": sum(a.size for a in arrs),
@@ -78,7 +82,7 @@ def unpack_weights(blob: dict, params_like) -> object:
     import jax
     import jax.numpy as jnp
 
-    raw = zstd.ZstdDecompressor().decompress(blob["payload"])
+    raw = codec.decompress(blob["payload"], blob.get("codec", "zstd"))
     leaves, treedef = jax.tree.flatten(params_like)
     out, off = [], 0
     dt = np.dtype(blob["dtype"])

@@ -1,0 +1,449 @@
+"""Batched multi-field NeurLZ compression engine.
+
+The serial engine trains one field's enhancer at a time, synchronously: one
+jitted dispatch per epoch *per field* with a host sync after every epoch to
+collect the loss, and the CPU-side conventional compressor runs strictly
+before any training starts.  Real deployments compress many fields of the
+same snapshot at once (the paper's cross-field design assumes they are
+resident together), so this engine restructures the hot path around the
+*snapshot*:
+
+  * **Field groups** — fields whose slice geometry and channel count match
+    are planned into groups (``NeurLZConfig.group_size`` caps fields per
+    group to tune the pipeline depth).  Slice-count-ragged groups are
+    handled natively: each field scans its own step count inside the shared
+    dispatch.
+  * **Fused training dispatch** (``field_batching="unroll"``, default) —
+    *every epoch of every field of a group* runs in a single jitted
+    ``lax.scan`` dispatch.  Each field's scan body is exactly
+    :func:`repro.core.online_trainer.scan_train` — the serial trace — so
+    trained weights, archives and reconstructions are **bit-identical** to
+    the serial engine.
+  * **``field_batching="vmap"``** — per-field params are stacked on a
+    leading ``F`` axis (:func:`repro.core.skipping_dnn.stack_params`) and
+    each epoch runs as one ``jax.vmap``-over-fields ``lax.scan``; the
+    stacked axis can be sharded across devices
+    (:func:`repro.distributed.sharding.field_sharding`,
+    ``field_shard=True``).  Maximum batching for accelerator backends;
+    opt-in because it is not bit-equal to serial: equal-slice-count
+    groups agree to float rounding only (XLA lowers the grouped
+    bottleneck ``conv_transpose`` differently), and ragged fields train
+    the padded step count per epoch with modulo-resampled slices
+    (error-bound guarantees are unaffected either way).
+  * **Async pipeline** — training *and* inference for every group are
+    dispatched before any result is awaited, so the device queue never
+    drains; the host meanwhile runs the *next* groups' conventional
+    compression and dataset construction, with ``jax.device_put`` moving
+    tensors early so upload overlaps compute.  With more than one device,
+    the conventional compressor's jitted stages run on the last device so
+    they never queue behind training (``prefetch=True``).
+  * **Batched inference** — encode- and decode-side ``predict_residual``
+    for a whole group run in one dispatch.  Inference always uses the exact
+    per-field graph regardless of the training strategy, so the
+    encoder-side reconstruction used for strict-mode outlier capture is
+    always reproducible by any decoder: archives stay bit-compatible.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from functools import partial
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import compressors
+from ..distributed import sharding as shardlib
+from ..optim import adamw_init, adamw_update, cosine_schedule
+from . import neurlz, online_trainer, skipping_dnn
+
+
+# ---------------------------------------------------------------------------
+# Group planning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FieldGroup:
+    names: list[str]                 # fields, input order
+    slice_hw: tuple[int, int]        # per-slice spatial shape
+    c_in: int                        # input channels (1 + aux fields)
+
+
+def plan_groups(fields: Mapping[str, np.ndarray], config) -> list[FieldGroup]:
+    """Group fields by slice geometry and channel count.
+
+    A group is the unit of batched dispatch: every field in it shares the
+    jitted graph's spatial/channel signature.  Slice *counts* may differ
+    within a group (ragged path).  ``config.group_size > 0`` chunks groups
+    to that many fields, trading per-dispatch batching for pipeline overlap
+    of conventional compression with training.
+    """
+    groups: dict[tuple, FieldGroup] = {}
+    for name, x in fields.items():
+        shape = np.moveaxis(np.asarray(x), config.slice_axis, 0).shape
+        c_in = 1 + len(neurlz._aux_names(config, name, fields))
+        key = (shape[1:], c_in)
+        if key not in groups:
+            groups[key] = FieldGroup(names=[], slice_hw=tuple(shape[1:]),
+                                     c_in=c_in)
+        groups[key].names.append(name)
+    out = []
+    for g in groups.values():
+        size = config.group_size if config.group_size > 0 else len(g.names)
+        for i in range(0, len(g.names), size):
+            out.append(FieldGroup(names=g.names[i:i + size],
+                                  slice_hw=g.slice_hw, c_in=g.c_in))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batched dispatches
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("spec", "epochs", "base_lr", "min_lr_frac",
+                                   "loss"))
+def _train_group_fused(params_t, opt_t, xs_t, ys_t, base_key, *, spec, epochs,
+                       base_lr, min_lr_frac, loss):
+    """All epochs of every field of a group in ONE dispatch.
+
+    ``spec`` is a static tuple of per-field
+    ``(steps, batch, total_steps, regulated, skip)``; per-field tensors ride
+    in tuples (slice counts may differ).  Per-epoch batch matrices come from
+    :func:`online_trainer.epoch_batches` with the same folded keys as the
+    serial trainer, and each field scans
+    :func:`online_trainer.scan_train` — the serial trace — which makes this
+    engine bit-identical to the serial one.  Returns per-epoch mean losses
+    ``[epochs, F]``.
+    """
+    new_p, new_o, losses = [], [], []
+    for f, (steps, batch, total_steps, reg, skip) in enumerate(spec):
+        n = xs_t[f].shape[0]
+        batches = jnp.concatenate([
+            online_trainer.epoch_batches(jax.random.fold_in(base_key, e),
+                                         n, steps, batch)
+            for e in range(epochs)], axis=0)        # [epochs*steps, batch]
+        p, o, lvals = online_trainer.scan_train(
+            params_t[f], opt_t[f], xs_t[f], ys_t[f], batches,
+            jnp.asarray(0, jnp.int32), cfg_reg=reg, cfg_skip=skip,
+            total_steps=total_steps, base_lr=base_lr,
+            min_lr_frac=min_lr_frac, loss=loss)
+        new_p.append(p)
+        new_o.append(o)
+        losses.append(jnp.mean(lvals.reshape(epochs, steps), axis=1))
+    return tuple(new_p), tuple(new_o), jnp.stack(losses, axis=1)
+
+
+@partial(jax.jit, static_argnames=("steps", "batch", "total_steps", "reg",
+                                   "skip", "base_lr", "min_lr_frac", "loss"))
+def _epoch_vmapped(params_st, opt_st, xs, ys, epoch_key, start_step,
+                   n_valid, *, steps, batch, total_steps, reg, skip,
+                   base_lr, min_lr_frac, loss):
+    """One epoch as a single ``jax.vmap``-over-fields ``lax.scan``.
+
+    ``xs``/``ys`` are padded to the group's max slice count ``[F,N,H,W,C]``
+    and every field runs ``steps`` (the padded count's) steps per epoch;
+    ``n_valid`` maps the shared per-epoch permutation into each ragged
+    field's own valid range (short fields resample slices modulo their
+    count), so the cosine horizon ``total_steps`` is shared and static.
+    """
+    n_pad = xs.shape[1]
+    batches = online_trainer.epoch_batches(epoch_key, n_pad, steps, batch)
+    lr_fn = cosine_schedule(base_lr, total_steps, min_lr_frac)
+
+    def loss_fn(p, xb, yb):
+        return online_trainer.batch_loss(p, xb, yb, regulated=reg, skip=skip,
+                                         loss=loss)
+
+    def body(carry, idx):
+        p, o, step = carry
+
+        def field_step(p_f, o_f, x_f, y_f, nv):
+            idx_f = idx % nv
+            xb = jnp.take(x_f, idx_f, axis=0)
+            yb = jnp.take(y_f, idx_f, axis=0)
+            lval, grads = jax.value_and_grad(loss_fn)(p_f, xb, yb)
+            p_f, o_f = adamw_update(grads, o_f, p_f, lr=lr_fn(step))
+            return p_f, o_f, lval
+
+        p, o, lvals = jax.vmap(field_step)(p, o, xs, ys, n_valid)
+        return (p, o, step + 1), lvals
+
+    (params_st, opt_st, _), losses = jax.lax.scan(
+        body, (params_st, opt_st, start_step), batches)
+    return params_st, opt_st, jnp.mean(losses, axis=0)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def _predict_group(params_t, xs_t, *, spec):
+    """Batched ``predict_residual``: every field of a group, one dispatch.
+
+    Always the exact per-field inference graph
+    (:func:`online_trainer.predict_graph`), so encode- and decode-side
+    reconstructions match the serial engine bit-for-bit regardless of the
+    training strategy.
+    """
+    return tuple(
+        online_trainer.predict_graph(params_t[f], xs_t[f], regulated=reg,
+                                     skip=skip)
+        for f, (reg, skip) in enumerate(spec))
+
+
+# ---------------------------------------------------------------------------
+# Group state through the pipeline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _GroupState:
+    group: FieldGroup
+    net_cfg: skipping_dnn.SkippingDNNConfig
+    inputs: list       # per-field device arrays [N_f, H, W, C]
+    targets: list
+    stats: list        # per-field normalization stats
+    params: tuple      # per-field trees (device; lazy while training runs)
+    opt: tuple
+    steps: list        # per-field steps/epoch
+    batch: list        # per-field batch size
+    total_steps: list  # per-field cosine horizon
+    losses: object = None   # device [epochs, F] once training is dispatched
+    resids: tuple = ()      # per-field lazy [N, H, W] residual predictions
+
+
+def _prepare_group(group: FieldGroup, fields, recs, ebs, config, tcfg,
+                   device=None) -> _GroupState:
+    """Host-side stage: datasets + async device upload + param init.
+
+    ``device`` pins the whole group (unroll-mode field sharding: groups are
+    round-robined over devices, and jit runs each group's program where its
+    operands live — identical programs, so results stay bit-identical)."""
+    net_cfg = config.net_config(group.c_in)
+    inputs, targets, stats = [], [], []
+    steps, batches, totals = [], [], []
+    for name in group.names:
+        x = np.asarray(fields[name])
+        aux = [recs[a] for a in neurlz._aux_names(config, name, fields)]
+        inp, tgt, st = neurlz.build_dataset(x, recs[name], ebs[name], aux,
+                                            config)
+        n = inp.shape[0]
+        b = min(tcfg.batch, n)
+        s = max(1, n // b)
+        steps.append(s)
+        batches.append(b)
+        totals.append(s * tcfg.epochs)
+        # device_put is async: upload overlaps earlier groups' training.
+        inputs.append(jax.device_put(inp, device))
+        targets.append(jax.device_put(tgt, device))
+        stats.append(st)
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = tuple(jax.device_put(skipping_dnn.init_params(key, net_cfg),
+                                  device)
+                   for _ in group.names)
+    opt = tuple(adamw_init(p) for p in params)
+    return _GroupState(group=group, net_cfg=net_cfg, inputs=inputs,
+                       targets=targets, stats=stats, params=params, opt=opt,
+                       steps=steps, batch=batches, total_steps=totals)
+
+
+def _dispatch_group(state: _GroupState, config, tcfg) -> None:
+    """Enqueue the group's full training AND inference without blocking."""
+    net_cfg = state.net_cfg
+    key = jax.random.PRNGKey(tcfg.seed)
+    if config.field_batching == "vmap":
+        _dispatch_vmapped(state, config, tcfg, key)
+    elif config.field_batching == "unroll":
+        if tcfg.epochs <= 0:
+            state.losses = jnp.zeros((0, len(state.group.names)), jnp.float32)
+        else:
+            spec = tuple((state.steps[f], state.batch[f],
+                          state.total_steps[f], net_cfg.regulated,
+                          net_cfg.skip)
+                         for f in range(len(state.group.names)))
+            state.params, state.opt, state.losses = _train_group_fused(
+                state.params, state.opt, tuple(state.inputs),
+                tuple(state.targets), key, spec=spec, epochs=tcfg.epochs,
+                base_lr=tcfg.lr, min_lr_frac=tcfg.min_lr_frac,
+                loss=tcfg.loss)
+    else:
+        raise ValueError(f"unknown field_batching {config.field_batching!r} "
+                         "(want 'unroll' or 'vmap')")
+    # Inference consumes the (still lazy) trained params — queues right
+    # behind training on the device, before any host sync.
+    pspec = tuple((net_cfg.regulated, net_cfg.skip)
+                  for _ in state.group.names)
+    state.resids = _predict_group(tuple(state.params), tuple(state.inputs),
+                                  spec=pspec)
+
+
+def _dispatch_vmapped(state: _GroupState, config, tcfg, key) -> None:
+    """vmap strategy: stack fields, pad ragged slice counts, train stacked."""
+    net_cfg = state.net_cfg
+    n_max = max(int(x.shape[0]) for x in state.inputs)
+    b = min(tcfg.batch, n_max)
+    steps = max(1, n_max // b)
+
+    def pad(a):
+        short = n_max - a.shape[0]
+        return a if short == 0 else jnp.pad(
+            a, ((0, short),) + ((0, 0),) * (a.ndim - 1))
+
+    xs = jnp.stack([pad(x) for x in state.inputs])
+    ys = jnp.stack([pad(y) for y in state.targets])
+    params_st = skipping_dnn.stack_params(list(state.params))
+    opt_st = jax.tree.map(lambda *a: jnp.stack(a), *state.opt)
+    n_valid = jnp.asarray([x.shape[0] for x in state.inputs], jnp.int32)
+    if config.field_shard:
+        mesh = shardlib.field_mesh()
+        if mesh is not None:
+            xs = shardlib.shard_fields(xs, mesh)
+            ys = shardlib.shard_fields(ys, mesh)
+            params_st = shardlib.shard_fields(params_st, mesh)
+            opt_st = shardlib.shard_fields(opt_st, mesh)
+    losses = []
+    for e in range(tcfg.epochs):
+        ekey = jax.random.fold_in(key, e)
+        start = jnp.asarray(e * steps, jnp.int32)
+        params_st, opt_st, mloss = _epoch_vmapped(
+            params_st, opt_st, xs, ys, ekey, start, n_valid,
+            steps=steps, batch=b, total_steps=steps * tcfg.epochs,
+            reg=net_cfg.regulated, skip=net_cfg.skip,
+            base_lr=tcfg.lr, min_lr_frac=tcfg.min_lr_frac, loss=tcfg.loss)
+        losses.append(mloss)
+    state.losses = jnp.stack(losses) if losses else \
+        jnp.zeros((0, len(state.group.names)), jnp.float32)
+    state.params = tuple(
+        skipping_dnn.unstack_params(params_st, len(state.group.names)))
+    state.opt = tuple(jax.tree.map(lambda a, i=i: a[i], opt_st)
+                      for i in range(len(state.group.names)))
+
+
+def _finalize_group(state: _GroupState, fields, recs, ebs, conv_arcs, config,
+                    collect_stats, out_fields) -> None:
+    """Blocking stage: fetch residuals, enhancement, entry packing."""
+    history = np.asarray(state.losses)          # blocks on training
+    for f, name in enumerate(state.group.names):
+        x = np.asarray(fields[name])
+        aux_names = neurlz._aux_names(config, name, fields)
+        entry = neurlz.pack_entry(
+            config, conv_arcs[name], state.params[f], state.stats[f],
+            aux_names, ebs[name], state.net_cfg,
+            [float(v) for v in history[:, f]], collect_stats)
+        neurlz.finalize_entry(entry, x, recs[name],
+                              np.asarray(state.resids[f]), ebs[name],
+                              state.stats[f], config)
+        out_fields[name] = entry
+
+
+# ---------------------------------------------------------------------------
+# Engine entry points
+# ---------------------------------------------------------------------------
+
+def _conv_device():
+    """Device for the conventional compressor's jitted stages: the last one,
+    so they never queue behind enhancer training on device 0."""
+    devs = jax.devices()
+    return devs[-1] if len(devs) > 1 else None
+
+
+def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
+             abs_eb: float | None = None, config=None,
+             collect_stats: bool = True) -> dict:
+    """Batched-engine compression; same archive contract as the serial path."""
+    config = config or neurlz.NeurLZConfig(engine="batched")
+    t0 = time.time()
+    tcfg = config.train_config()
+    groups = plan_groups(fields, config)
+
+    conv_arcs, recs, ebs = {}, {}, {}
+    conv_time = [0.0]
+    conv_dev = _conv_device() if config.prefetch else None
+
+    def conv_compress(names):
+        ctx = jax.default_device(conv_dev) if conv_dev is not None \
+            else contextlib.nullcontext()
+        with ctx:
+            for name in names:
+                if name in conv_arcs:
+                    continue
+                tc = time.time()
+                arc, rec = compressors.compress(
+                    np.asarray(fields[name]), rel_eb, abs_eb=abs_eb,
+                    compressor=config.compressor)
+                conv_time[0] += time.time() - tc
+                conv_arcs[name], recs[name], ebs[name] = arc, rec, arc["abs_eb"]
+
+    # Cross-field aux may reference fields in later groups; resolve the whole
+    # conventional stage upfront in that case.  Otherwise it runs lazily per
+    # group, overlapping earlier groups' device-side training.
+    if config.cross_field or not config.prefetch:
+        conv_compress(list(fields))
+
+    # Unroll-mode field sharding: spread groups across training devices —
+    # all but the conventional-compressor device, so conv work never shares
+    # a queue with enhancer training.
+    train_devs = jax.devices()
+    if conv_dev is not None and len(train_devs) > 1:
+        train_devs = train_devs[:-1]
+    t_train0 = time.time()
+    conv_before = conv_time[0]
+    states = []
+    for gi, group in enumerate(groups):
+        conv_compress(group.names)
+        dev = train_devs[gi % len(train_devs)] \
+            if (config.field_shard and len(train_devs) > 1
+                and config.field_batching == "unroll") else None
+        state = _prepare_group(group, fields, recs, ebs, config, tcfg,
+                               device=dev)
+        _dispatch_group(state, config, tcfg)   # async: no host sync
+        states.append(state)
+
+    out_fields: dict = {}
+    for state in states:
+        _finalize_group(state, fields, recs, ebs, conv_arcs, config,
+                        collect_stats, out_fields)
+    # Conventional compression that ran lazily inside the loop belongs to
+    # conv_s, not train_s (keep the two disjoint, like the serial engine).
+    train_time = (time.time() - t_train0) - (conv_time[0] - conv_before)
+
+    timing = {"total_s": time.time() - t0, "conv_s": conv_time[0],
+              "train_s": train_time}
+    return neurlz.assemble_archive(fields, out_fields, config, timing)
+
+
+def decompress(arc: dict) -> dict[str, np.ndarray]:
+    """Batched decode: all enhancer inference in one dispatch per signature.
+
+    Output is bit-identical to ``neurlz.decompress(arc, engine="serial")``
+    because the per-field inference graph is the same.
+    """
+    slice_axis = arc["slice_axis"]
+    recs = {name: compressors.decompress(e["conv"])
+            for name, e in arc["fields"].items()}
+
+    # Group fields by inference signature so each dispatch is shape-static.
+    sig_groups: dict[tuple, list[str]] = {}
+    prepared: dict[str, tuple] = {}
+    for name, e in arc["fields"].items():
+        net_cfg, params = neurlz.decode_entry_net(e)
+        aux = [recs[a] for a in e["aux"]]
+        stats = [tuple(s) for s in e["stats"]]
+        inputs, _, _ = online_trainer.make_dataset(
+            recs[name], None, e["abs_eb"], aux=aux, slice_axis=slice_axis,
+            stats=stats)
+        sig = (inputs.shape, net_cfg.regulated, net_cfg.skip)
+        sig_groups.setdefault(sig, []).append(name)
+        prepared[name] = (net_cfg, params, jnp.asarray(inputs))
+
+    out = {}
+    for sig, names in sig_groups.items():
+        spec = tuple((prepared[n][0].regulated, prepared[n][0].skip)
+                     for n in names)
+        resids = _predict_group(tuple(prepared[n][1] for n in names),
+                                tuple(prepared[n][2] for n in names),
+                                spec=spec)
+        for f, name in enumerate(names):
+            out[name] = neurlz.apply_decoded_entry(
+                arc["fields"][name], recs[name], np.asarray(resids[f]),
+                slice_axis)
+    return {name: out[name] for name in arc["fields"]}

@@ -14,6 +14,16 @@ Decompression mirrors it: conventional decode → enhancer inference →
 weights) come from the archive, and the conventional reconstruction is
 bit-identical on both sides, so decode reproduces the encoder's enhanced
 field exactly.
+
+Two compression engines share this module's helpers:
+  * ``engine="serial"``   — one field at a time, one dispatch per epoch per
+    field; the reference implementation.
+  * ``engine="batched"``  — the multi-field engine
+    (:mod:`repro.core.batched_engine`): all fields of a snapshot train in a
+    single dispatch per epoch, CPU-side conventional compression overlaps
+    device-side training, and the stacked field axis can be sharded across
+    devices.  Archives are bit-compatible with the serial engine (and
+    bit-identical under the default ``field_batching="unroll"`` strategy).
 """
 from __future__ import annotations
 
@@ -26,7 +36,6 @@ import numpy as np
 
 from .. import compressors
 from ..compressors import outliers as outlier_codec
-from ..compressors import szlike, zfplike
 from . import archive as arc_io
 from . import metrics, online_trainer, regulation, skipping_dnn
 
@@ -45,6 +54,11 @@ class NeurLZConfig:
     cross_field: Mapping[str, tuple] = dataclasses.field(default_factory=dict)
     weight_dtype: str = "float32"       # archive precision for DNN weights
     widths: tuple = (4, 4, 6, 6, 8)
+    engine: str = "serial"              # serial | batched
+    field_batching: str = "unroll"      # unroll (bit-exact) | vmap (stacked)
+    group_size: int = 2                 # fields per batched dispatch (0 = all)
+    prefetch: bool = True               # overlap CPU conv stage with training
+    field_shard: bool = True            # spread field groups over devices
 
     def net_config(self, c_in: int) -> skipping_dnn.SkippingDNNConfig:
         return skipping_dnn.SkippingDNNConfig(
@@ -65,10 +79,87 @@ def _aux_names(cfg: NeurLZConfig, name: str, fields) -> list[str]:
     return aux
 
 
+# ---------------------------------------------------------------------------
+# Helpers shared by both engines.  The batched engine builds entries through
+# the very same functions, which is what keeps archives bit-compatible.
+# ---------------------------------------------------------------------------
+
+def build_dataset(x: np.ndarray, rec: np.ndarray, eb: float,
+                  aux: list[np.ndarray], config: NeurLZConfig):
+    """Per-field training tensors honoring the residual/direct ablation."""
+    inputs, targets, stats = online_trainer.make_dataset(
+        rec, x, eb, aux=aux, slice_axis=config.slice_axis)
+    if not config.learn_residual:
+        # Ablation: learn the normalized original directly (paper Fig. 4
+        # "non-residual"), scaled by the decomp std so magnitudes match.
+        mu, sd = stats[0]
+        o = np.moveaxis(np.asarray(x, np.float64), config.slice_axis, 0)
+        targets = (((o - mu) / sd).astype(np.float32))[..., None]
+    return inputs, targets, stats
+
+
+def pack_entry(config: NeurLZConfig, conv_arc: dict, params, stats,
+               aux: list[str], eb: float, net_cfg, history,
+               collect_stats: bool) -> dict:
+    return {
+        "conv": conv_arc,
+        "weights": arc_io.pack_weights(params, config.weight_dtype),
+        "stats": [list(s) for s in stats],
+        "aux": aux,
+        "mode": config.mode,
+        "abs_eb": eb,
+        "net": {"c_in": net_cfg.c_in, "widths": list(config.widths),
+                "regulated": net_cfg.regulated, "skip": net_cfg.skip},
+        "learn_residual": config.learn_residual,
+        "loss_history": history if collect_stats else [],
+    }
+
+
+def finalize_entry(entry: dict, x: np.ndarray, rec: np.ndarray,
+                   resid_norm: np.ndarray, eb: float, stats,
+                   config: NeurLZConfig) -> np.ndarray:
+    """Enhancement + strict-mode outlier capture; mutates ``entry``."""
+    resid_norm = np.moveaxis(resid_norm, 0, config.slice_axis)
+    field_rec = _apply_enhancement(rec, resid_norm, eb, x.dtype, stats, config)
+    if config.mode == "strict":
+        mask = regulation.outlier_mask(x, field_rec, eb)
+        entry["outliers"] = outlier_codec.encode_outliers(mask)
+        field_rec = regulation.apply_strict(field_rec, rec, mask)
+    return field_rec
+
+
+def assemble_archive(fields: Mapping[str, np.ndarray], out_fields: dict,
+                     config: NeurLZConfig, timing: dict) -> dict:
+    # Entries land in input-field order regardless of engine scheduling.
+    arc = {
+        "kind": "neurlz",
+        "fields": {name: out_fields[name] for name in fields},
+        "slice_axis": config.slice_axis,
+        "compressor": config.compressor,
+        "timing": timing,
+    }
+    arc["bitrate"] = {n: field_bitrate(arc, n, int(np.asarray(fields[n]).size))
+                      for n in fields}
+    return arc
+
+
 def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
              abs_eb: float | None = None, config: NeurLZConfig = NeurLZConfig(),
              collect_stats: bool = True) -> dict:
-    """Compress a dict of same-shaped fields into a NeurLZ archive dict."""
+    """Compress a dict of fields of one snapshot into a NeurLZ archive dict."""
+    if config.engine == "batched":
+        from . import batched_engine
+        return batched_engine.compress(fields, rel_eb, abs_eb=abs_eb,
+                                       config=config,
+                                       collect_stats=collect_stats)
+    if config.engine != "serial":
+        raise ValueError(f"unknown engine {config.engine!r} "
+                         "(want 'serial' or 'batched')")
+    return _compress_serial(fields, rel_eb, abs_eb=abs_eb, config=config,
+                            collect_stats=collect_stats)
+
+
+def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats):
     t0 = time.time()
     conv_arcs, recs, ebs = {}, {}, {}
     conv_time = 0.0
@@ -84,19 +175,12 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
     for name, x in fields.items():
         x = np.asarray(x)
         eb = ebs[name]
-        aux = [recs[a] for a in _aux_names(config, name, fields)]
-        c_in = 1 + len(aux)
-        net_cfg = config.net_config(c_in)
+        aux_names = _aux_names(config, name, fields)
+        aux = [recs[a] for a in aux_names]
+        net_cfg = config.net_config(1 + len(aux))
         tcfg = config.train_config()
 
-        inputs, targets, stats = online_trainer.make_dataset(
-            recs[name], x, eb, aux=aux, slice_axis=config.slice_axis)
-        if not config.learn_residual:
-            # Ablation: learn the normalized original directly (paper Fig. 4
-            # "non-residual"), scaled by the decomp std so magnitudes match.
-            mu, sd = stats[0]
-            o = np.moveaxis(np.asarray(x, np.float64), config.slice_axis, 0)
-            targets = (((o - mu) / sd).astype(np.float32))[..., None]
+        inputs, targets, stats = build_dataset(x, recs[name], eb, aux, config)
 
         key = jax.random.PRNGKey(tcfg.seed)
         params = skipping_dnn.init_params(key, net_cfg)
@@ -106,39 +190,14 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
         train_time += time.time() - tt
 
         resid_norm = online_trainer.predict_residual(params, inputs, net_cfg)
-        resid_norm = np.moveaxis(resid_norm, 0, config.slice_axis)
-        field_rec = _apply_enhancement(
-            recs[name], resid_norm, eb, x.dtype, stats, config)
-
-        entry = {
-            "conv": conv_arcs[name],
-            "weights": arc_io.pack_weights(params, config.weight_dtype),
-            "stats": [list(s) for s in stats],
-            "aux": _aux_names(config, name, fields),
-            "mode": config.mode,
-            "abs_eb": eb,
-            "net": {"c_in": c_in, "widths": list(config.widths),
-                    "regulated": net_cfg.regulated, "skip": net_cfg.skip},
-            "learn_residual": config.learn_residual,
-            "loss_history": history if collect_stats else [],
-        }
-        if config.mode == "strict":
-            mask = regulation.outlier_mask(x, field_rec, eb)
-            entry["outliers"] = outlier_codec.encode_outliers(mask)
-            field_rec = regulation.apply_strict(field_rec, recs[name], mask)
+        entry = pack_entry(config, conv_arcs[name], params, stats, aux_names,
+                           eb, net_cfg, history, collect_stats)
+        finalize_entry(entry, x, recs[name], resid_norm, eb, stats, config)
         out_fields[name] = entry
 
-    arc = {
-        "kind": "neurlz",
-        "fields": out_fields,
-        "slice_axis": config.slice_axis,
-        "compressor": config.compressor,
-        "timing": {"total_s": time.time() - t0, "conv_s": conv_time,
-                   "train_s": train_time},
-    }
-    arc["bitrate"] = {n: field_bitrate(arc, n, int(np.asarray(fields[n]).size))
-                      for n in fields}
-    return arc
+    timing = {"total_s": time.time() - t0, "conv_s": conv_time,
+              "train_s": train_time}
+    return assemble_archive(fields, out_fields, config, timing)
 
 
 def _apply_enhancement(rec, resid_norm, eb, out_dtype, stats, config) -> np.ndarray:
@@ -149,36 +208,56 @@ def _apply_enhancement(rec, resid_norm, eb, out_dtype, stats, config) -> np.ndar
     return (resid_norm.astype(np.float64) * sd + mu).astype(out_dtype)
 
 
-def decompress(arc: dict) -> dict[str, np.ndarray]:
-    """Full decode: conventional + enhancer inference + outlier patching."""
+def decode_entry_net(entry: dict):
+    """Rebuild (net_cfg, params) for one archived field entry."""
+    net = entry["net"]
+    net_cfg = skipping_dnn.SkippingDNNConfig(
+        c_in=net["c_in"], widths=tuple(net["widths"]),
+        regulated=net["regulated"], skip=net["skip"])
+    params = skipping_dnn.init_params(jax.random.PRNGKey(0), net_cfg)
+    params = arc_io.unpack_weights(entry["weights"], params)
+    return net_cfg, params
+
+
+def apply_decoded_entry(entry: dict, rec: np.ndarray, resid_norm: np.ndarray,
+                        slice_axis: int) -> np.ndarray:
+    """Decode-side enhancement + outlier patch from archived metadata."""
+    eb = entry["abs_eb"]
+    resid_norm = np.moveaxis(resid_norm, 0, slice_axis)
+    stats = [tuple(s) for s in entry["stats"]]
+    dtype = np.dtype(entry["conv"]["dtype"])
+    cfg = NeurLZConfig(mode=entry["mode"],
+                       learn_residual=entry["learn_residual"])
+    out = _apply_enhancement(rec, resid_norm, eb, dtype, stats, cfg)
+    if entry["mode"] == "strict" and "outliers" in entry:
+        mask = outlier_codec.decode_outliers(entry["outliers"])
+        out = regulation.apply_strict(out, rec, mask)
+    return out
+
+
+def decompress(arc: dict, *, engine: str = "serial") -> dict[str, np.ndarray]:
+    """Full decode: conventional + enhancer inference + outlier patching.
+
+    ``engine="batched"`` runs every field's enhancer inference in a single
+    dispatch (bit-identical output — the batched path inlines the exact
+    serial inference graph per field).
+    """
+    if engine == "batched":
+        from . import batched_engine
+        return batched_engine.decompress(arc)
     slice_axis = arc["slice_axis"]
     recs = {name: compressors.decompress(e["conv"])
             for name, e in arc["fields"].items()}
     out = {}
     for name, e in arc["fields"].items():
-        eb = e["abs_eb"]
-        net = e["net"]
-        net_cfg = skipping_dnn.SkippingDNNConfig(
-            c_in=net["c_in"], widths=tuple(net["widths"]),
-            regulated=net["regulated"], skip=net["skip"])
-        key = jax.random.PRNGKey(0)
-        params = skipping_dnn.init_params(key, net_cfg)
-        params = arc_io.unpack_weights(e["weights"], params)
-
+        net_cfg, params = decode_entry_net(e)
         aux = [recs[a] for a in e["aux"]]
         stats = [tuple(s) for s in e["stats"]]
         inputs, _, _ = online_trainer.make_dataset(
-            recs[name], None, eb, aux=aux, slice_axis=slice_axis, stats=stats)
+            recs[name], None, e["abs_eb"], aux=aux, slice_axis=slice_axis,
+            stats=stats)
         resid_norm = online_trainer.predict_residual(params, inputs, net_cfg)
-        resid_norm = np.moveaxis(resid_norm, 0, slice_axis)
-
-        dtype = np.dtype(e["conv"]["dtype"])
-        cfg = NeurLZConfig(mode=e["mode"], learn_residual=e["learn_residual"])
-        rec = _apply_enhancement(recs[name], resid_norm, eb, dtype, stats, cfg)
-        if e["mode"] == "strict" and "outliers" in e:
-            mask = outlier_codec.decode_outliers(e["outliers"])
-            rec = regulation.apply_strict(rec, recs[name], mask)
-        out[name] = rec
+        out[name] = apply_decoded_entry(e, recs[name], resid_norm, slice_axis)
     return out
 
 

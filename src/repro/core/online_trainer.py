@@ -70,22 +70,36 @@ def make_dataset(decomp: np.ndarray, orig: np.ndarray | None, eb: float,
     return inputs, targets, stats
 
 
-@partial(jax.jit, static_argnames=("cfg_reg", "cfg_skip", "batch", "steps",
-                                   "total_steps", "base_lr", "min_lr_frac", "loss"))
-def _train_epoch(params, opt_state, inputs, targets, epoch_key, start_step, *,
-                 cfg_reg, cfg_skip, batch, steps, total_steps, base_lr,
-                 min_lr_frac, loss):
-    n = inputs.shape[0]
-    lr_fn = cosine_schedule(base_lr, total_steps, min_lr_frac)
-    # Fresh shuffle each epoch; drop-last batching (different tail every epoch).
+def epoch_batches(epoch_key, n: int, steps: int, batch: int):
+    """The epoch's shuffled drop-last batch index matrix ``[steps, batch]``.
+
+    Fresh shuffle each epoch (different tail every epoch) — traceable, shared
+    verbatim by the serial per-epoch dispatch and the batched engine's fused
+    whole-training dispatch so the sample order is identical in both."""
     perm = jax.random.permutation(epoch_key, n)[: steps * batch]
-    batches = perm.reshape(steps, batch)
+    return perm.reshape(steps, batch)
+
+
+def batch_loss(params, xb, yb, *, regulated, skip, loss):
+    """Mini-batch training loss — single definition for every engine."""
+    pred = skipping_dnn.forward(params, xb, regulated=regulated, skip=skip)
+    if loss == "l1":
+        return jnp.mean(jnp.abs(pred - yb))
+    return jnp.mean(jnp.square(pred - yb))
+
+
+def scan_train(params, opt_state, inputs, targets, batches, start_step, *,
+               cfg_reg, cfg_skip, total_steps, base_lr, min_lr_frac, loss):
+    """SGD scan over ``batches`` ``[S, batch]`` — the trace shared by the
+    serial trainer (one epoch per dispatch) and the batched engine (every
+    epoch of every field of a group in one dispatch).  Sharing the exact
+    graph is what keeps the two engines bit-identical.  Returns per-step
+    losses ``[S]``."""
+    lr_fn = cosine_schedule(base_lr, total_steps, min_lr_frac)
 
     def loss_fn(p, xb, yb):
-        pred = skipping_dnn.forward(p, xb, regulated=cfg_reg, skip=cfg_skip)
-        if loss == "l1":
-            return jnp.mean(jnp.abs(pred - yb))
-        return jnp.mean(jnp.square(pred - yb))
+        return batch_loss(p, xb, yb, regulated=cfg_reg, skip=cfg_skip,
+                          loss=loss)
 
     def body(carry, idx):
         p, s, step = carry
@@ -98,7 +112,38 @@ def _train_epoch(params, opt_state, inputs, targets, epoch_key, start_step, *,
 
     (params, opt_state, _), losses = jax.lax.scan(
         body, (params, opt_state, start_step), batches)
+    return params, opt_state, losses
+
+
+def epoch_core(params, opt_state, inputs, targets, epoch_key, start_step, *,
+               cfg_reg, cfg_skip, batch, steps, total_steps, base_lr,
+               min_lr_frac, loss):
+    """One epoch of online learning for a single field."""
+    batches = epoch_batches(epoch_key, inputs.shape[0], steps, batch)
+    params, opt_state, losses = scan_train(
+        params, opt_state, inputs, targets, batches, start_step,
+        cfg_reg=cfg_reg, cfg_skip=cfg_skip, total_steps=total_steps,
+        base_lr=base_lr, min_lr_frac=min_lr_frac, loss=loss)
     return params, opt_state, jnp.mean(losses)
+
+
+_train_epoch = partial(jax.jit, static_argnames=(
+    "cfg_reg", "cfg_skip", "batch", "steps", "total_steps", "base_lr",
+    "min_lr_frac", "loss"))(epoch_core)
+
+
+def predict_graph(params, xs, *, regulated: bool, skip: bool,
+                  batch: int = 64):
+    """Enhancer inference over all slices, chunked exactly like
+    :func:`predict_residual` so both engines emit the same values; returns
+    ``[N, H, W]``.  Traceable — the batched engine inlines one copy per field
+    into a single dispatch."""
+    outs = []
+    for i in range(0, xs.shape[0], batch):
+        out = skipping_dnn.forward(params, xs[i:i + batch],
+                                   regulated=regulated, skip=skip)
+        outs.append(out[..., 0])
+    return jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
 
 
 def train(params, inputs: np.ndarray, targets: np.ndarray, cfg: TrainConfig,
@@ -133,14 +178,14 @@ def train(params, inputs: np.ndarray, targets: np.ndarray, cfg: TrainConfig,
     return params, opt_state, history
 
 
+_predict = partial(jax.jit, static_argnames=("regulated", "skip", "batch"))(
+    predict_graph)
+
+
 def predict_residual(params, inputs: np.ndarray,
                      net_cfg: skipping_dnn.SkippingDNNConfig,
                      batch: int = 64) -> np.ndarray:
     """Predicted normalized residual for every slice, [N,H,W]."""
-    outs = []
-    xs = jnp.asarray(inputs)
-    for i in range(0, inputs.shape[0], batch):
-        out = skipping_dnn.forward(params, xs[i:i + batch],
-                                   regulated=net_cfg.regulated, skip=net_cfg.skip)
-        outs.append(np.asarray(out[..., 0]))
-    return np.concatenate(outs, axis=0)
+    return np.asarray(_predict(params, jnp.asarray(inputs),
+                               regulated=net_cfg.regulated,
+                               skip=net_cfg.skip, batch=batch))

@@ -78,6 +78,19 @@ def param_count(params) -> int:
     return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
 
 
+def stack_params(params_list):
+    """Stack F same-structure enhancer trees into one tree with a leading
+    field axis — the layout the batched engine trains under ``jax.vmap`` and
+    shards across devices (``repro.distributed.sharding.field_sharding``)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def unstack_params(stacked, num_fields: int):
+    """Inverse of :func:`stack_params`: per-field trees (views, no copy)."""
+    return [jax.tree.map(lambda x, i=i: x[i], stacked)
+            for i in range(num_fields)]
+
+
 def _conv(x, p, stride=1):
     y = jax.lax.conv_general_dilated(
         x, p["w"], window_strides=(stride, stride), padding="SAME",

@@ -121,7 +121,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, remat: str = "nothing",
     sh.set_active_mesh(None)
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_cost.xla_cost_dict(compiled)
     hlo = hlo_cost.analyze(compiled.as_text())   # loop-aware per-device cost
     flops = hlo["flops"]
     bytes_acc = hlo["bytes"]
@@ -168,8 +168,6 @@ def lower_neurlz_enhance(mesh, *, n_blocks: int = 512, side: int = 512,
     (vmap over blocks; blocks sharded over every mesh axis) — the TPU-native
     reformulation of the paper's per-block GPU loop (DESIGN.md §3).
     """
-    import numpy as np
-
     from ..core import skipping_dnn  # enables x64 (compressor stack) ...
     jax.config.update("jax_enable_x64", False)  # ... switch it back off
 

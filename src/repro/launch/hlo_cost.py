@@ -19,7 +19,6 @@ module — exactly what the roofline terms need.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 
@@ -362,6 +361,15 @@ class Analyzer:
                 total.bytes += ins.result_bytes + self._operand_bytes(comp, ins)
         self._memo[key] = total
         return total
+
+
+def xla_cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict across jaxlib versions (it
+    returns a one-element list on jaxlib<=0.4.x)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
 
 
 def analyze(text: str) -> dict:

@@ -19,13 +19,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .. import configs
 from ..checkpoint.checkpoint import CheckpointManager
 from ..checkpoint.fault_tolerance import FailureInjector, StepWatchdog
 from ..data.tokens import TokenStream
-from ..distributed import sharding as sh
 from ..models import model as M
 from ..optim import warmup_cosine
 

@@ -7,7 +7,6 @@ serving inner loop (one new token against a KV/state cache).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

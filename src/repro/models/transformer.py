@@ -15,7 +15,6 @@ the full [B, S, V] logits — with 262k vocabs that tensor would dominate HBM).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -1,0 +1,147 @@
+"""Batched multi-field engine: equivalence with the serial reference,
+ragged shapes, archive codec round-trips (zstd and zlib fallback)."""
+import numpy as np
+import pytest
+
+from repro import core
+from repro.compressors import codec
+from repro.core import archive as A
+from repro.data import fields as F
+
+FIELDS = F.make_fields("nyx", shape=(8, 16, 16), seed=7)
+NAMES = list(FIELDS)
+
+
+def _cfg(engine="serial", **kw):
+    return core.NeurLZConfig(epochs=2, mode="strict", engine=engine, **kw)
+
+
+def _fields_dump(arc):
+    return A.dumps(arc["fields"])
+
+
+def test_batched_matches_serial_bitwise():
+    """Same config/seed -> identical archives and reconstructions."""
+    arc_s = core.compress(FIELDS, rel_eb=1e-3, config=_cfg())
+    arc_b = core.compress(FIELDS, rel_eb=1e-3, config=_cfg("batched"))
+    assert _fields_dump(arc_s) == _fields_dump(arc_b)
+    dec_s = core.decompress(arc_s, engine="serial")
+    dec_b = core.decompress(arc_b, engine="batched")
+    for name in FIELDS:
+        assert np.array_equal(dec_s[name], dec_b[name])
+
+
+def test_batched_group_size_does_not_change_results():
+    ref = None
+    for gs in (0, 1, 3):
+        arc = core.compress(FIELDS, rel_eb=1e-3,
+                            config=_cfg("batched", group_size=gs))
+        dump = _fields_dump(arc)
+        assert ref is None or dump == ref
+        ref = dump
+
+
+def test_batched_ragged_slice_counts():
+    """Fields with differing slice counts share one group; the unroll path
+    stays bit-identical to serial even when ragged."""
+    rag = {"a": FIELDS[NAMES[0]], "b": FIELDS[NAMES[1]][:5]}
+    arc_s = core.compress(rag, rel_eb=1e-3, config=_cfg())
+    arc_b = core.compress(rag, rel_eb=1e-3, config=_cfg("batched"))
+    assert _fields_dump(arc_s) == _fields_dump(arc_b)
+    dec = core.decompress(arc_b, engine="batched")
+    for name, x in rag.items():
+        eb = arc_b["fields"][name]["abs_eb"]
+        err = np.abs(dec[name].astype(np.float64)
+                     - x.astype(np.float64)).max()
+        assert err <= eb
+
+
+def test_batched_cross_field():
+    cross = {NAMES[0]: (NAMES[1],)}
+    arc_s = core.compress(FIELDS, rel_eb=1e-3,
+                          config=_cfg(cross_field=cross))
+    arc_b = core.compress(FIELDS, rel_eb=1e-3,
+                          config=_cfg("batched", cross_field=cross))
+    assert arc_b["fields"][NAMES[0]]["net"]["c_in"] == 2
+    assert _fields_dump(arc_s) == _fields_dump(arc_b)
+
+
+def test_vmap_strategy_respects_strict_bound():
+    """The stacked-vmap strategy trades bit-equality for batching, but the
+    strict 1x error bound must still hold exactly."""
+    arc = core.compress(FIELDS, rel_eb=1e-3,
+                        config=_cfg("batched", field_batching="vmap"))
+    dec = core.decompress(arc, engine="batched")
+    for name, x in FIELDS.items():
+        eb = arc["fields"][name]["abs_eb"]
+        err = np.abs(dec[name].astype(np.float64)
+                     - x.astype(np.float64)).max()
+        assert err <= eb
+
+
+def test_unknown_engine_and_strategy_rejected():
+    with pytest.raises(ValueError):
+        core.compress(FIELDS, rel_eb=1e-3,
+                      config=core.NeurLZConfig(engine="warp"))
+    with pytest.raises(ValueError):
+        core.compress(FIELDS, rel_eb=1e-3,
+                      config=_cfg("batched", field_batching="teleport"))
+
+
+# ---------------------------------------------------------------------------
+# Archive codec round-trips (zstd optional, zlib fallback)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def force_codec():
+    def _force(name):
+        codec.set_default_codec(name)
+    yield _force
+    codec.set_default_codec(None)
+
+
+@pytest.mark.parametrize("name", ["zlib", "zstd"])
+def test_archive_roundtrip_under_codec(tmp_path, force_codec, name):
+    if name == "zstd" and not codec.HAVE_ZSTD:
+        pytest.skip("zstandard not installed")
+    force_codec(name)
+    sub = {NAMES[0]: FIELDS[NAMES[0]]}
+    arc = core.compress(sub, rel_eb=1e-3, config=_cfg("batched"))
+    assert arc["fields"][NAMES[0]]["weights"]["codec"] == name
+    path = str(tmp_path / "block.nlz")
+    core.save(path, arc)
+    dec = core.decompress(core.load(path))
+    ref = core.decompress(arc)
+    assert np.array_equal(dec[NAMES[0]], ref[NAMES[0]])
+
+
+def test_zlib_archive_decodes_without_forced_codec(force_codec):
+    """Codec name travels in the header: a zlib archive decodes even when
+    the process default would pick zstd."""
+    force_codec("zlib")
+    sub = {NAMES[0]: FIELDS[NAMES[0]]}
+    arc = core.compress(sub, rel_eb=1e-3, config=_cfg())
+    blob = A.loads(A.dumps(arc))
+    codec.set_default_codec(None)
+    dec = core.decompress(blob)
+    eb = arc["fields"][NAMES[0]]["abs_eb"]
+    err = np.abs(dec[NAMES[0]].astype(np.float64)
+                 - FIELDS[NAMES[0]].astype(np.float64)).max()
+    assert err <= eb
+
+
+def test_codec_sniffing_roundtrip(force_codec):
+    """Headerless streams (checkpoints) decode by magic sniffing."""
+    payload = b"neurlz" * 100
+    for name in codec.available_codecs():
+        force_codec(name)
+        comp, used = codec.compress(payload)
+        assert used == name
+        assert codec.decompress_sniffed(comp) == payload
+
+
+def test_zstd_unavailable_raises_helpfully():
+    if codec.HAVE_ZSTD:
+        pytest.skip("zstandard installed")
+    with pytest.raises(ImportError):
+        codec.compress(b"x", codec="zstd")

@@ -31,7 +31,7 @@ def test_scan_multiplies_trip_count():
     exp = 12 * 2 * 64 * 64 * 64
     assert 0.95 * exp <= r["flops"] <= 1.3 * exp
     # XLA's own analysis counts the body once - ours must exceed it
-    assert r["flops"] > (c.cost_analysis() or {}).get("flops", 0) * 5
+    assert r["flops"] > hlo_cost.xla_cost_dict(c).get("flops", 0) * 5
 
 
 def test_nested_scan():

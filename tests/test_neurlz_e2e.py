@@ -1,6 +1,5 @@
 """End-to-end NeurLZ: the paper's pipeline with all regulation modes."""
 import numpy as np
-import pytest
 
 from repro import core
 from repro.core import metrics

@@ -59,8 +59,8 @@ def test_compressed_psum_under_shard_map():
 
     if jax.device_count() < 1:
         return
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import mesh_kwargs
+    mesh = jax.make_mesh((1,), ("pod",), **mesh_kwargs(1))
     g = {"w": jnp.ones((8, 8), jnp.float32) * 0.5}
     ef = GC.init_ef(g)
 

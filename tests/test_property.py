@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the system's core invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro import compressors as C
 from repro.compressors import outliers as OC

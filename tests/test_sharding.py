@@ -1,7 +1,6 @@
 """Sharding rules: divisibility guards, param/cache spec assignment."""
 from types import SimpleNamespace
 
-import jax
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
