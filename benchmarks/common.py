@@ -72,6 +72,31 @@ def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def peak_rss_bytes() -> int:
+    """Process-lifetime peak RSS (monotonic — use deltas across phases with
+    care; the streaming benchs report it alongside the pipeline's own
+    residency-ledger peak, which is the budgeted quantity)."""
+    import resource
+    import sys
+    ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return int(ru if sys.platform == "darwin" else ru * 1024)
+
+
+def writer_overlap(report: dict) -> float:
+    """Fraction of async-writer busy time hidden behind compute.
+
+    Non-overlapped writer work is time the pipeline spent *blocked on the
+    writer*: the ``close`` drain tail plus back-pressure stalls inside
+    ``put`` (full bounded queue); everything else of ``writer_busy_s`` ran
+    concurrently with training/prefetch."""
+    busy = float(report.get("writer_busy_s", 0.0))
+    if busy <= 0.0:
+        return 1.0
+    stalled = (float(report.get("writer_close_wait_s", 0.0))
+               + float(report.get("writer_put_wait_s", 0.0)))
+    return 1.0 - min(busy, stalled) / busy
+
+
 def bench_fields(dataset="nyx", shape=(32, 48, 48), seed=2):
     return F.make_fields(dataset, shape=shape, seed=seed)
 

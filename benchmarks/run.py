@@ -24,14 +24,17 @@ MODULES = [
     "bench_grad_compress",      # framework integration (DESIGN.md §4)
     "bench_kernels",            # Pallas kernel validation
     "bench_roofline",           # §Roofline table from dry-run records
+    "bench_streaming",          # bounded-memory pipeline vs in-memory engine
 ]
 
 
 # CI smoke subset: the kernel validations plus the engine-comparison rows of
-# the scalability bench, at tiny-field settings (see each module's smoke path).
+# the scalability bench and the streaming-budget row, at tiny-field settings
+# (see each module's smoke path).
 MODULES_SMOKE = [
     "bench_kernels",
     "bench_scalability",
+    "bench_streaming",
 ]
 
 

@@ -4,10 +4,27 @@ Layout per field: conventional compressed payload ‖ enhancer weights
 (dataset-precision floats, zstd'd) ‖ outlier coordinates (strict mode) ‖
 normalization stats + header.  msgpack binary container, numpy arrays as
 typed blobs.  ``nbytes`` accounting matches what lands on disk.
+
+Two container formats, versioned side by side:
+
+* **whole-dict** (original) — one msgpack blob for the entire archive dict
+  (:func:`save` / :func:`load`).
+* **streaming v1** — an append-able record container written incrementally
+  by the streaming pipeline (:class:`ArchiveAppender`): an 8-byte magic,
+  then length-prefixed msgpack records (one per field entry, in completion
+  order), then an index footer record mapping field name → (offset, length)
+  plus snapshot metadata, the footer's own offset, and the magic again as a
+  trailer.  :class:`ArchiveReader` seeks the footer and decodes one field
+  at a time, so a decoder never has to hold the whole archive in memory.
+  Field *entries* are byte-identical to the whole-dict format's — only the
+  container differs — and :func:`repro.core.load` sniffs the magic so both
+  formats load through the same call.
 """
 from __future__ import annotations
 
 import io
+import os
+import struct
 
 import msgpack
 import numpy as np
@@ -52,6 +69,121 @@ def save(path: str, obj) -> int:
 def load(path: str):
     with open(path, "rb") as f:
         return loads(f.read())
+
+
+# ---------------------------------------------------------------------------
+# Streaming container (format v1): append-able records + index footer
+# ---------------------------------------------------------------------------
+
+STREAM_MAGIC = b"NLZSTRM1"
+_LEN = struct.Struct("<Q")
+
+
+def is_streaming_archive(path_or_bytes) -> bool:
+    """Sniff the streaming-container magic (path or leading bytes)."""
+    if isinstance(path_or_bytes, (bytes, bytearray)):
+        return bytes(path_or_bytes[:8]) == STREAM_MAGIC
+    try:
+        with open(path_or_bytes, "rb") as f:
+            return f.read(8) == STREAM_MAGIC
+    except (OSError, TypeError):
+        return False
+
+
+class ArchiveAppender:
+    """Incremental streaming-archive writer.
+
+    ``append``/``add_entry`` write length-prefixed msgpack records as they
+    arrive (the async writer thread calls this one entry at a time);
+    ``finalize`` seals the container with the index footer.  ``sink`` is a
+    path or a binary file object.
+    """
+
+    def __init__(self, sink):
+        self._own = isinstance(sink, (str, bytes, os.PathLike))
+        self._f = open(sink, "wb") if self._own else sink
+        self._f.write(STREAM_MAGIC)
+        self._offset = len(STREAM_MAGIC)
+        self.entries: dict[str, list[int]] = {}   # name -> [offset, length]
+        self.bytes_written = self._offset
+
+    def append(self, obj) -> tuple[int, int]:
+        data = dumps(obj)
+        off = self._offset
+        self._f.write(_LEN.pack(len(data)))
+        self._f.write(data)
+        self._offset += _LEN.size + len(data)
+        self.bytes_written = self._offset
+        return off, len(data)
+
+    def add_entry(self, name: str, entry: dict) -> None:
+        off, ln = self.append({"name": name, "entry": entry})
+        self.entries[name] = [off, ln]
+
+    def finalize(self, meta: dict) -> int:
+        """Write the index footer; returns total container bytes."""
+        footer = {"version": 1, "meta": meta, "entries": self.entries}
+        foff, _ = self.append(footer)
+        self._f.write(_LEN.pack(foff))
+        self._f.write(STREAM_MAGIC)
+        self._offset += _LEN.size + len(STREAM_MAGIC)
+        self.bytes_written = self._offset
+        self._f.flush()
+        if self._own:
+            self._f.close()
+        return self._offset
+
+    def abort(self) -> None:
+        """Close without a footer (error path); the file stays sniffable as
+        a streaming archive but unreadable — by design, half-written
+        snapshots must not decode silently."""
+        if self._own:
+            self._f.close()
+
+
+class ArchiveReader:
+    """Random-access reader for the streaming container.
+
+    Decodes the index footer once, then ``read_entry(name)`` loads exactly
+    one field's record from disk — the basis of one-field-at-a-time decode.
+    """
+
+    def __init__(self, source):
+        self._own = isinstance(source, (str, bytes, os.PathLike))
+        self._f = open(source, "rb") if self._own else source
+        self._f.seek(0)
+        if self._f.read(8) != STREAM_MAGIC:
+            raise ValueError("not a NeurLZ streaming archive (bad magic)")
+        self._f.seek(-(len(STREAM_MAGIC) + _LEN.size), io.SEEK_END)
+        foff = _LEN.unpack(self._f.read(_LEN.size))[0]
+        if self._f.read(8) != STREAM_MAGIC:
+            raise ValueError("truncated NeurLZ streaming archive (no trailer)")
+        footer = self._read_record(foff)
+        self.version = footer["version"]
+        self.meta = footer["meta"]
+        self.entries = footer["entries"]
+
+    def _read_record(self, offset: int):
+        self._f.seek(offset)
+        n = _LEN.unpack(self._f.read(_LEN.size))[0]
+        return loads(self._f.read(n))
+
+    def read_entry(self, name: str) -> dict:
+        off, _ = self.entries[name]
+        rec = self._read_record(off)
+        if rec["name"] != name:
+            raise ValueError(f"index points at {rec['name']!r}, not {name!r}")
+        return rec["entry"]
+
+    def close(self) -> None:
+        if self._own:
+            self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
 
 def pack_weights(params_tree, dtype: str = "float32") -> dict:

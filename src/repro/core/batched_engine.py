@@ -72,6 +72,38 @@ class FieldGroup:
     c_in: int                        # input channels (1 + aux fields)
 
 
+def sliced_shape(shape: tuple, slice_axis: int) -> tuple:
+    """``np.moveaxis(x, slice_axis, 0).shape`` from the shape alone (no
+    array needed — the streaming planner works off source metadata)."""
+    axis = slice_axis % len(shape)
+    return (shape[axis],) + tuple(s for i, s in enumerate(shape) if i != axis)
+
+
+def plan_groups_from_meta(shapes: Mapping[str, tuple],
+                          c_ins: Mapping[str, int],
+                          config) -> list[FieldGroup]:
+    """Group-plan from field *metadata* only (shapes + channel counts).
+
+    This is the plan export used by the streaming scheduler, which must
+    plan a snapshot bigger than memory before loading any field data.
+    """
+    groups: dict[tuple, FieldGroup] = {}
+    for name, shape in shapes.items():
+        sshape = sliced_shape(tuple(shape), config.slice_axis)
+        key = (sshape[1:], c_ins[name])
+        if key not in groups:
+            groups[key] = FieldGroup(names=[], slice_hw=tuple(sshape[1:]),
+                                     c_in=c_ins[name])
+        groups[key].names.append(name)
+    out = []
+    for g in groups.values():
+        size = config.group_size if config.group_size > 0 else len(g.names)
+        for i in range(0, len(g.names), size):
+            out.append(FieldGroup(names=g.names[i:i + size],
+                                  slice_hw=g.slice_hw, c_in=g.c_in))
+    return out
+
+
 def plan_groups(fields: Mapping[str, np.ndarray], config) -> list[FieldGroup]:
     """Group fields by slice geometry and channel count.
 
@@ -81,22 +113,10 @@ def plan_groups(fields: Mapping[str, np.ndarray], config) -> list[FieldGroup]:
     to that many fields, trading per-dispatch batching for pipeline overlap
     of conventional compression with training.
     """
-    groups: dict[tuple, FieldGroup] = {}
-    for name, x in fields.items():
-        shape = np.moveaxis(np.asarray(x), config.slice_axis, 0).shape
-        c_in = 1 + len(neurlz._aux_names(config, name, fields))
-        key = (shape[1:], c_in)
-        if key not in groups:
-            groups[key] = FieldGroup(names=[], slice_hw=tuple(shape[1:]),
-                                     c_in=c_in)
-        groups[key].names.append(name)
-    out = []
-    for g in groups.values():
-        size = config.group_size if config.group_size > 0 else len(g.names)
-        for i in range(0, len(g.names), size):
-            out.append(FieldGroup(names=g.names[i:i + size],
-                                  slice_hw=g.slice_hw, c_in=g.c_in))
-    return out
+    shapes = {name: np.asarray(x).shape for name, x in fields.items()}
+    c_ins = {name: 1 + len(neurlz._aux_names(config, name, fields))
+             for name in fields}
+    return plan_groups_from_meta(shapes, c_ins, config)
 
 
 # ---------------------------------------------------------------------------
@@ -318,21 +338,31 @@ def _dispatch_vmapped(state: _GroupState, config, tcfg, key) -> None:
                       for i in range(len(state.group.names)))
 
 
-def _finalize_group(state: _GroupState, fields, recs, ebs, conv_arcs, config,
-                    collect_stats, out_fields) -> None:
-    """Blocking stage: fetch residuals, enhancement, entry packing."""
+def group_results(state: _GroupState):
+    """Sync point: block on the group's training/inference and yield
+    ``(f, name, history, resid)`` per field — shared by this engine's
+    finalize and the streaming pipeline's (which defers packing to the
+    writer thread)."""
     history = np.asarray(state.losses)          # blocks on training
     for f, name in enumerate(state.group.names):
+        yield (f, name, [float(v) for v in history[:, f]],
+               np.asarray(state.resids[f]))
+
+
+def _finalize_group(state: _GroupState, fields, recs, ebs, conv_arcs, config,
+                    collect_stats, out_fields, on_entry=None) -> None:
+    """Blocking stage: fetch residuals, enhancement, entry packing."""
+    for f, name, hist, resid in group_results(state):
         x = np.asarray(fields[name])
         aux_names = neurlz._aux_names(config, name, fields)
         entry = neurlz.pack_entry(
             config, conv_arcs[name], state.params[f], state.stats[f],
-            aux_names, ebs[name], state.net_cfg,
-            [float(v) for v in history[:, f]], collect_stats)
-        neurlz.finalize_entry(entry, x, recs[name],
-                              np.asarray(state.resids[f]), ebs[name],
+            aux_names, ebs[name], state.net_cfg, hist, collect_stats)
+        neurlz.finalize_entry(entry, x, recs[name], resid, ebs[name],
                               state.stats[f], config)
         out_fields[name] = entry
+        if on_entry is not None:
+            on_entry(name, entry)
 
 
 # ---------------------------------------------------------------------------
@@ -348,8 +378,14 @@ def _conv_device():
 
 def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
              abs_eb: float | None = None, config=None,
-             collect_stats: bool = True) -> dict:
-    """Batched-engine compression; same archive contract as the serial path."""
+             collect_stats: bool = True, on_entry=None) -> dict:
+    """Batched-engine compression; same archive contract as the serial path.
+
+    ``on_entry(name, entry)`` fires as each field's archive entry completes
+    (groups finalize as soon as the next group is dispatched, not at end of
+    run), which lets callers archive incrementally and bounds how many
+    groups' tensors stay resident at once.
+    """
     config = config or neurlz.NeurLZConfig(engine="batched")
     t0 = time.time()
     tcfg = config.train_config()
@@ -387,7 +423,13 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
         train_devs = train_devs[:-1]
     t_train0 = time.time()
     conv_before = conv_time[0]
-    states = []
+    # Per-group completion: finalize a group as soon as enough later groups
+    # are dispatched to keep every training device's queue non-empty
+    # (depth >= devices + 1), instead of holding all groups' tensors until
+    # an end-of-run finalize pass.
+    depth = max(2, len(train_devs) + 1)
+    out_fields: dict = {}
+    states: list[_GroupState] = []
     for gi, group in enumerate(groups):
         conv_compress(group.names)
         dev = train_devs[gi % len(train_devs)] \
@@ -397,11 +439,12 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
                                device=dev)
         _dispatch_group(state, config, tcfg)   # async: no host sync
         states.append(state)
-
-    out_fields: dict = {}
+        if len(states) >= depth:
+            _finalize_group(states.pop(0), fields, recs, ebs, conv_arcs,
+                            config, collect_stats, out_fields, on_entry)
     for state in states:
         _finalize_group(state, fields, recs, ebs, conv_arcs, config,
-                        collect_stats, out_fields)
+                        collect_stats, out_fields, on_entry)
     # Conventional compression that ran lazily inside the loop belongs to
     # conv_s, not train_s (keep the two disjoint, like the serial engine).
     train_time = (time.time() - t_train0) - (conv_time[0] - conv_before)

@@ -15,7 +15,7 @@ weights) come from the archive, and the conventional reconstruction is
 bit-identical on both sides, so decode reproduces the encoder's enhanced
 field exactly.
 
-Two compression engines share this module's helpers:
+Three compression engines share this module's helpers:
   * ``engine="serial"``   — one field at a time, one dispatch per epoch per
     field; the reference implementation.
   * ``engine="batched"``  — the multi-field engine
@@ -24,6 +24,12 @@ Two compression engines share this module's helpers:
     device-side training, and the stacked field axis can be sharded across
     devices.  Archives are bit-compatible with the serial engine (and
     bit-identical under the default ``field_batching="unroll"`` strategy).
+  * ``engine="streaming"`` — the bounded-memory pipeline
+    (:mod:`repro.streaming`): fields are pulled lazily from a chunked
+    source, conventional reconstructions are refcounted and evicted the
+    moment their last cross-field consumer finishes, and entry packing +
+    archival run on a writer thread under a hard ``max_resident_bytes``
+    budget.  Entries are bit-identical to the serial engine's.
 """
 from __future__ import annotations
 
@@ -54,11 +60,12 @@ class NeurLZConfig:
     cross_field: Mapping[str, tuple] = dataclasses.field(default_factory=dict)
     weight_dtype: str = "float32"       # archive precision for DNN weights
     widths: tuple = (4, 4, 6, 6, 8)
-    engine: str = "serial"              # serial | batched
+    engine: str = "serial"              # serial | batched | streaming
     field_batching: str = "unroll"      # unroll (bit-exact) | vmap (stacked)
     group_size: int = 2                 # fields per batched dispatch (0 = all)
     prefetch: bool = True               # overlap CPU conv stage with training
     field_shard: bool = True            # spread field groups over devices
+    max_resident_bytes: int = 0         # streaming residency budget (0 = off)
 
     def net_config(self, c_in: int) -> skipping_dnn.SkippingDNNConfig:
         return skipping_dnn.SkippingDNNConfig(
@@ -115,16 +122,28 @@ def pack_entry(config: NeurLZConfig, conv_arc: dict, params, stats,
     }
 
 
+def enhance_and_mask(x: np.ndarray, rec: np.ndarray, resid_norm: np.ndarray,
+                     eb: float, stats, config: NeurLZConfig):
+    """Encoder-side enhancement; returns ``(field_rec, mask)`` where ``mask``
+    is the strict-mode outlier mask (``None`` otherwise).  Split from
+    :func:`finalize_entry` so the streaming pipeline can capture the mask on
+    the compute thread and defer its *encoding* to the writer thread."""
+    resid_norm = np.moveaxis(resid_norm, 0, config.slice_axis)
+    field_rec = _apply_enhancement(rec, resid_norm, eb, x.dtype, stats, config)
+    mask = None
+    if config.mode == "strict":
+        mask = regulation.outlier_mask(x, field_rec, eb)
+        field_rec = regulation.apply_strict(field_rec, rec, mask)
+    return field_rec, mask
+
+
 def finalize_entry(entry: dict, x: np.ndarray, rec: np.ndarray,
                    resid_norm: np.ndarray, eb: float, stats,
                    config: NeurLZConfig) -> np.ndarray:
     """Enhancement + strict-mode outlier capture; mutates ``entry``."""
-    resid_norm = np.moveaxis(resid_norm, 0, config.slice_axis)
-    field_rec = _apply_enhancement(rec, resid_norm, eb, x.dtype, stats, config)
-    if config.mode == "strict":
-        mask = regulation.outlier_mask(x, field_rec, eb)
+    field_rec, mask = enhance_and_mask(x, rec, resid_norm, eb, stats, config)
+    if mask is not None:
         entry["outliers"] = outlier_codec.encode_outliers(mask)
-        field_rec = regulation.apply_strict(field_rec, rec, mask)
     return field_rec
 
 
@@ -152,9 +171,14 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
         return batched_engine.compress(fields, rel_eb, abs_eb=abs_eb,
                                        config=config,
                                        collect_stats=collect_stats)
+    if config.engine == "streaming":
+        from ..streaming import pipeline
+        return pipeline.compress_dict(fields, rel_eb, abs_eb=abs_eb,
+                                      config=config,
+                                      collect_stats=collect_stats)
     if config.engine != "serial":
         raise ValueError(f"unknown engine {config.engine!r} "
-                         "(want 'serial' or 'batched')")
+                         "(want 'serial', 'batched' or 'streaming')")
     return _compress_serial(fields, rel_eb, abs_eb=abs_eb, config=config,
                             collect_stats=collect_stats)
 
@@ -287,5 +311,30 @@ def save(path: str, arc: dict) -> int:
     return arc_io.save(path, arc)
 
 
+def assemble_streaming_archive(reader: arc_io.ArchiveReader) -> dict:
+    """Reassemble a streaming container into the whole-dict archive format.
+
+    Entries land in the snapshot's input-field order (recorded in the index
+    footer), so the result is byte-compatible with what the in-memory
+    engines produce.
+    """
+    meta = reader.meta
+    fields = {name: reader.read_entry(name) for name in meta["field_order"]}
+    arc = {
+        "kind": "neurlz",
+        "fields": fields,
+        "slice_axis": meta["slice_axis"],
+        "compressor": meta["compressor"],
+        "timing": meta.get("timing", {}),
+    }
+    arc["bitrate"] = {
+        n: field_bitrate(arc, n, int(np.prod(meta["shapes"][n])))
+        for n in fields}
+    return arc
+
+
 def load(path: str) -> dict:
+    if arc_io.is_streaming_archive(path):
+        with arc_io.ArchiveReader(path) as r:
+            return assemble_streaming_archive(r)
     return arc_io.load(path)

@@ -79,6 +79,39 @@ def make_fields(dataset: str = "nyx", shape=(64, 64, 64), seed: int = 0,
     raise ValueError(f"unknown dataset {dataset!r}")
 
 
+def snapshot_specs(num_fields: int, shape=(16, 32, 32), dataset: str = "nyx",
+                   seed0: int = 2) -> dict[str, dict]:
+    """Lazy per-field recipes for a ``num_fields``-field snapshot.
+
+    Names match :func:`benchmarks.common.snapshot_fields` exactly
+    (``{field}_s{seed}`` over successive seed blocks), but nothing is
+    generated here — :func:`load_spec` materializes one field at a time, so
+    the streaming pipeline can ingest snapshots far larger than memory
+    (``repro.streaming.source.synthetic_snapshot_source`` wraps this)."""
+    specs: dict[str, dict] = {}
+    seed = seed0
+    while len(specs) < num_fields:
+        for name in DATASET_FIELDS[dataset]:
+            if len(specs) < num_fields:
+                specs[f"{name}_s{seed}"] = {"dataset": dataset,
+                                            "shape": tuple(shape),
+                                            "seed": seed, "field": name}
+        seed += 1
+    return specs
+
+
+def load_spec(spec: dict) -> np.ndarray:
+    """Materialize one snapshot field from its recipe.
+
+    Regenerates only that field's seed block (the shared-latent coupling
+    means a block's fields come from one RNG pass), so transient memory is
+    one block regardless of snapshot size.  Deterministic: repeated loads
+    return identical bytes, as the streaming source contract requires."""
+    block = make_fields(spec["dataset"], shape=spec["shape"],
+                        seed=spec["seed"])
+    return block[spec["field"]]
+
+
 DATASET_DTYPES = {"nyx": "float32", "miranda": "float64", "hurricane": "float32"}
 DATASET_FIELDS = {
     "nyx": ["temperature", "dark_matter_density", "baryon_density", "velocity_y"],

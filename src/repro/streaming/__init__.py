@@ -1,0 +1,15 @@
+"""Streaming snapshot pipeline: bounded-memory chunked ingestion + async
+archive writer.
+
+Public API:
+    compress / iter_decompress / decompress — out-of-core snapshot codec
+    StreamConfig, ResidencyLedger           — scheduler knobs + accounting
+    ChunkedFieldSource + implementations    — lazy snapshot inputs
+    AsyncArchiveWriter                      — writer-thread archival
+"""
+from .pipeline import (PipelineScheduler, StreamConfig, ResidencyLedger,  # noqa: F401
+                       compress, decompress, iter_decompress, order_groups)
+from .source import (BlockedSource, ChunkedFieldSource, DictSource,
+                     FieldMeta, FunctionSource, NpyDirSource, as_source,
+                     synthetic_snapshot_source)  # noqa: F401
+from .writer import AsyncArchiveWriter, EntryTask  # noqa: F401

@@ -1,0 +1,134 @@
+"""Async archive writer: entry packing + codec + incremental save on a
+writer thread.
+
+The scheduler hands over *unpacked* per-field results (trained params,
+normalization stats, the strict-mode outlier mask, the conventional
+archive) the moment a group syncs; everything downstream — weight
+flattening + codec compression (:func:`repro.core.archive.pack_weights`
+via :func:`repro.core.neurlz.pack_entry`), outlier coordinate encoding,
+msgpack packing and the append to the streaming container — runs on this
+thread, fully overlapped with the next group's training.  The queue is
+bounded so a slow disk back-pressures the pipeline instead of buffering
+unbounded entries.
+
+Entries are produced by the exact serial-engine packing helpers, so the
+bytes that land in the container are bit-identical to the in-memory
+engines' archive entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import numpy as np
+
+from ..compressors import outliers as outlier_codec
+from ..core import archive as arc_io
+from ..core import neurlz
+
+
+@dataclasses.dataclass
+class EntryTask:
+    """One field's finished-but-unpacked compression result."""
+    name: str
+    conv_arc: dict
+    params: object              # trained enhancer tree (host or device)
+    stats: list
+    aux: list[str]
+    eb: float
+    net_cfg: object
+    history: list
+    mask: np.ndarray | None     # strict-mode outlier mask (encoded here)
+
+
+class AsyncArchiveWriter:
+    """Bounded-queue writer thread over :class:`ArchiveAppender`.
+
+    ``put`` blocks when ``queue_size`` entries are already pending (disk
+    back-pressure).  ``close`` drains the queue, writes the index footer
+    and returns writer statistics; a failure on the writer thread re-raises
+    from the next ``put``/``close``.
+    """
+
+    _STOP = object()
+
+    def __init__(self, sink, config, *, collect_stats: bool = True,
+                 queue_size: int = 4):
+        self._appender = arc_io.ArchiveAppender(sink)
+        self._config = config
+        self._collect_stats = collect_stats
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, queue_size))
+        self._error: BaseException | None = None
+        self.busy_s = 0.0
+        self.put_wait_s = 0.0
+        self.entries = 0
+        self._thread = threading.Thread(target=self._run,
+                                        name="neurlz-archive-writer",
+                                        daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            task = self._q.get()
+            try:
+                if task is self._STOP:
+                    return
+                if self._error is not None:
+                    continue        # drain after failure
+                t0 = time.time()
+                entry = neurlz.pack_entry(
+                    self._config, task.conv_arc, task.params, task.stats,
+                    task.aux, task.eb, task.net_cfg, task.history,
+                    self._collect_stats)
+                if task.mask is not None:
+                    entry["outliers"] = outlier_codec.encode_outliers(
+                        task.mask)
+                self._appender.add_entry(task.name, entry)
+                self.busy_s += time.time() - t0
+                self.entries += 1
+            except BaseException as exc:  # noqa: BLE001 - reported to caller
+                self._error = exc
+            finally:
+                self._q.task_done()
+
+    def _check(self) -> None:
+        if self._error is not None:
+            exc, self._error = self._error, None
+            raise RuntimeError("archive writer thread failed") from exc
+
+    def put(self, task: EntryTask) -> None:
+        """Enqueue one entry; blocks under back-pressure (full queue).  The
+        blocked time is writer work stalling compute, counted as
+        non-overlapped in the stats."""
+        self._check()
+        t0 = time.time()
+        self._q.put(task)
+        self.put_wait_s += time.time() - t0
+
+    def close(self, meta: dict) -> dict:
+        """Drain, seal the container, join the thread; returns stats.
+
+        ``close_wait_s`` is the time the caller spent blocked here — writer
+        work that did *not* overlap compute (the overlap metric in
+        benchmarks is derived from it).
+        """
+        t0 = time.time()
+        self._q.put(self._STOP)
+        self._thread.join()
+        self._check()
+        total = self._appender.finalize(meta)
+        return {
+            "entries": self.entries,
+            "bytes_written": total,
+            "writer_busy_s": self.busy_s,
+            "writer_put_wait_s": self.put_wait_s,
+            "writer_close_wait_s": time.time() - t0,
+        }
+
+    def abort(self) -> None:
+        """Stop the thread without finalizing (error-path cleanup)."""
+        self._q.put(self._STOP)
+        self._thread.join(timeout=10.0)
+        self._appender.abort()

@@ -1,0 +1,270 @@
+"""Streaming snapshot pipeline: bounded-memory scheduling, bit-identity to
+the serial engine, the incremental container format, chunked sources, and
+one-field-at-a-time decode."""
+import io
+import os
+
+import numpy as np
+import pytest
+
+from repro import core, streaming
+from repro.core import archive as A
+from repro.core import batched_engine
+from repro.data import fields as F
+
+FIELDS = F.make_fields("nyx", shape=(8, 16, 16), seed=7)
+NAMES = list(FIELDS)
+
+
+def _cfg(engine="serial", **kw):
+    return core.NeurLZConfig(epochs=2, mode="strict", engine=engine, **kw)
+
+
+def _serial_arc(flds, **kw):
+    return core.compress(flds, rel_eb=1e-3, config=_cfg(**kw))
+
+
+def _stream_to(tmp_path, flds_or_source, name="snap.nlzs", **cfg_kw):
+    path = str(tmp_path / name)
+    report = streaming.compress(flds_or_source, path, rel_eb=1e-3,
+                                config=_cfg("streaming", **cfg_kw))
+    return path, report
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity with the in-memory serial path
+# ---------------------------------------------------------------------------
+
+def test_streamed_archive_bit_identical_to_serial(tmp_path):
+    path, _ = _stream_to(tmp_path, FIELDS, group_size=1)
+    arc_serial = _serial_arc(FIELDS)
+    arc_stream = core.load(path)
+    assert A.dumps(arc_stream["fields"]) == A.dumps(arc_serial["fields"])
+    # and the whole-dict load contract matches: bitrate, compressor, axis
+    assert arc_stream["compressor"] == arc_serial["compressor"]
+    assert arc_stream["slice_axis"] == arc_serial["slice_axis"]
+    assert arc_stream["bitrate"] == arc_serial["bitrate"]
+
+
+def test_engine_streaming_through_core_compress():
+    arc_serial = _serial_arc(FIELDS)
+    arc_stream = core.compress(FIELDS, rel_eb=1e-3, config=_cfg("streaming"))
+    assert A.dumps(arc_stream["fields"]) == A.dumps(arc_serial["fields"])
+    assert "peak_resident_bytes" in arc_stream["timing"]
+    assert arc_stream["timing"]["entries"] == len(FIELDS)
+
+
+def test_streaming_cross_field_bit_identical(tmp_path):
+    cross = F.DEFAULT_CROSS_FIELD["nyx"]
+    arc_serial = core.compress(FIELDS, rel_eb=1e-3,
+                               config=_cfg(cross_field=cross))
+    path, _ = _stream_to(tmp_path, FIELDS, cross_field=cross, group_size=1)
+    assert A.dumps(core.load(path)["fields"]) == A.dumps(arc_serial["fields"])
+
+
+def test_streaming_ragged_and_order_independent(tmp_path):
+    rag = {"a": FIELDS[NAMES[0]], "b": FIELDS[NAMES[1]][:5],
+           "c": FIELDS[NAMES[2]]}
+    arc_serial = _serial_arc(rag)
+    for gs in (0, 1, 2):
+        path, _ = _stream_to(tmp_path, rag, name=f"rag{gs}.nlzs",
+                             group_size=gs)
+        assert A.dumps(core.load(path)["fields"]) == \
+            A.dumps(arc_serial["fields"])
+
+
+# ---------------------------------------------------------------------------
+# Bounded memory: snapshot bigger than the residency budget
+# ---------------------------------------------------------------------------
+
+def test_bigger_than_memory_snapshot_under_budget(tmp_path):
+    src = streaming.synthetic_snapshot_source(12, shape=(8, 16, 16))
+    flds = {n: src.load(n) for n in src.names()}
+    total = sum(x.nbytes for x in flds.values())
+    ws = 4 * flds[src.names()[0]].nbytes   # x + rec + inputs + targets
+    budget = int(2.2 * ws)
+    assert total > budget, "snapshot must exceed the budget for this test"
+
+    path = str(tmp_path / "big.nlzs")
+    sched = streaming.PipelineScheduler(
+        _cfg("streaming", group_size=1, max_resident_bytes=budget))
+    report = sched.run(src, path, rel_eb=1e-3)
+    assert report["peak_resident_bytes"] <= budget
+    assert report["entries"] == len(flds)
+    # ...and still bit-identical to compressing the whole dict serially.
+    arc_serial = _serial_arc(flds)
+    assert A.dumps(core.load(path)["fields"]) == A.dumps(arc_serial["fields"])
+
+
+def test_budget_too_small_raises_with_context(tmp_path):
+    with pytest.raises(MemoryError, match="max_resident_bytes"):
+        streaming.compress(
+            FIELDS, str(tmp_path / "tiny.nlzs"), rel_eb=1e-3,
+            config=_cfg("streaming", group_size=1, max_resident_bytes=1000))
+
+
+def test_ledger_accounting():
+    led = streaming.ResidencyLedger(100)
+    led.add("a", 60)
+    assert led.fits(40) and not led.fits(41)
+    led.add("b", 40)
+    assert led.peak == 100
+    led.drop("a")
+    assert led.current == 40
+    led.drop("missing")                     # no-op
+    assert led.current == 40
+    assert "b" in led and "a" not in led
+
+
+def test_order_groups_frees_aux_early():
+    """The walk order keeps aux producer and consumer adjacent."""
+    shapes = {n: (8, 16, 16) for n in ("p", "c", "u1", "u2", "u3")}
+    metas = {n: streaming.FieldMeta.of(s, "float32")
+             for n, s in shapes.items()}
+    cfg = _cfg(cross_field={"c": ("p",)}, group_size=1)
+    groups = batched_engine.plan_groups_from_meta(
+        shapes, {n: 2 if n == "c" else 1 for n in shapes}, cfg)
+    aux_map = {n: list(cfg.cross_field.get(n, ())) for n in shapes}
+    order = streaming.order_groups(groups, aux_map, metas)
+    pos = {g.names[0]: i for i, g in enumerate(order)}
+    assert abs(pos["c"] - pos["p"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Incremental container + streaming decode
+# ---------------------------------------------------------------------------
+
+def test_container_roundtrip_and_random_access(tmp_path):
+    path, report = _stream_to(tmp_path, FIELDS)
+    assert A.is_streaming_archive(path)
+    assert os.path.getsize(path) == report["bytes_written"]
+    with A.ArchiveReader(path) as r:
+        assert r.meta["field_order"] == NAMES
+        # random access: read a single late entry without touching others
+        entry = r.read_entry(NAMES[-1])
+        assert entry["mode"] == "strict"
+    assert not A.is_streaming_archive(b"not an archive")
+
+
+def test_iter_decompress_matches_serial_decode(tmp_path):
+    path, _ = _stream_to(tmp_path, FIELDS)
+    dec_serial = core.decompress(_serial_arc(FIELDS))
+    seen = []
+    for name, x in streaming.iter_decompress(path):
+        seen.append(name)
+        assert np.array_equal(x, dec_serial[name])
+    assert seen == NAMES
+
+
+def test_iter_decompress_cross_field(tmp_path):
+    cross = {NAMES[0]: (NAMES[1],), NAMES[2]: (NAMES[1],)}
+    path, _ = _stream_to(tmp_path, FIELDS, cross_field=cross)
+    dec_serial = core.decompress(
+        core.compress(FIELDS, rel_eb=1e-3, config=_cfg(cross_field=cross)))
+    dec_stream = streaming.decompress(path)
+    for name in FIELDS:
+        assert np.array_equal(dec_stream[name], dec_serial[name])
+
+
+def test_in_memory_sink_bytesio():
+    buf = io.BytesIO()
+    streaming.compress(FIELDS, buf, rel_eb=1e-3, config=_cfg("streaming"))
+    buf.seek(0)
+    with A.ArchiveReader(buf) as r:
+        arc = core.assemble_streaming_archive(r)
+    assert A.dumps(arc["fields"]) == A.dumps(_serial_arc(FIELDS)["fields"])
+
+
+# ---------------------------------------------------------------------------
+# Chunked sources
+# ---------------------------------------------------------------------------
+
+def test_dict_and_function_source_metadata():
+    src = streaming.as_source(FIELDS)
+    assert src.names() == NAMES
+    m = src.meta(NAMES[0])
+    assert m.shape == (8, 16, 16)
+    assert m.nbytes == FIELDS[NAMES[0]].nbytes
+
+    lazy = streaming.synthetic_snapshot_source(5, shape=(8, 16, 16))
+    assert len(lazy.names()) == 5
+    # naming parity with the eager benchmark helper
+    from benchmarks import common
+    eager = common.snapshot_fields(5, shape=(8, 16, 16))
+    assert lazy.names() == list(eager)
+    for n in lazy.names():
+        assert np.array_equal(lazy.load(n), eager[n])
+        assert lazy.load(n).nbytes == lazy.meta(n).nbytes
+
+
+def test_npy_dir_source_streams_bit_identical(tmp_path):
+    d = tmp_path / "npys"
+    d.mkdir()
+    for n, x in FIELDS.items():
+        np.save(str(d / f"{n}.npy"), x)
+    src = streaming.as_source(str(d))
+    assert src.names() == sorted(NAMES)
+    assert isinstance(src.load(NAMES[0]), np.memmap)
+    path, _ = _stream_to(tmp_path, src)
+    arc_serial = _serial_arc({n: FIELDS[n] for n in sorted(NAMES)})
+    assert A.dumps(core.load(path)["fields"]) == A.dumps(arc_serial["fields"])
+
+
+def test_blocked_source_splits_and_reassembles(tmp_path):
+    big = F.make_fields("nyx", shape=(16, 16, 16), seed=1)["temperature"]
+    base = streaming.DictSource({"huge": big})
+    bsrc = streaming.BlockedSource(base, max_block_bytes=big.nbytes // 3)
+    man = bsrc.manifest["huge"]
+    assert [b[0] for b in man["blocks"]] == bsrc.names()
+    assert sum(hi - lo for _, lo, hi in man["blocks"]) == big.shape[0]
+
+    path, _ = _stream_to(tmp_path, bsrc, group_size=1)
+    arc = core.load(path)
+    # block entries == serial compression of the pre-split snapshot
+    presplit = {bn: np.ascontiguousarray(big[lo:hi])
+                for bn, lo, hi in man["blocks"]}
+    arc_serial = _serial_arc(presplit)
+    assert A.dumps(arc["fields"]) == A.dumps(arc_serial["fields"])
+    # decode reassembles the original field under every block's bound
+    dec = streaming.decompress(path)
+    assert list(dec) == ["huge"]
+    assert dec["huge"].shape == big.shape
+    max_eb = max(arc["fields"][bn]["abs_eb"] for bn, _, _ in man["blocks"])
+    err = np.abs(dec["huge"].astype(np.float64) - big.astype(np.float64))
+    assert float(err.max()) <= max_eb
+
+
+def test_blocked_source_leaves_small_fields_alone():
+    src = streaming.BlockedSource(streaming.DictSource(FIELDS),
+                                  max_block_bytes=10 * 2**20)
+    assert src.names() == NAMES
+    assert src.manifest == {}
+    assert np.array_equal(src.load(NAMES[0]), FIELDS[NAMES[0]])
+
+
+def test_as_source_rejects_garbage():
+    with pytest.raises(TypeError):
+        streaming.as_source(42)
+
+
+# ---------------------------------------------------------------------------
+# Async writer
+# ---------------------------------------------------------------------------
+
+def test_writer_thread_error_surfaces(tmp_path):
+    cfg = _cfg("streaming")
+    w = streaming.AsyncArchiveWriter(str(tmp_path / "x.nlzs"), cfg)
+    w.put(streaming.EntryTask(name="f", conv_arc={}, params=None, stats=[],
+                              aux=[], eb=1.0, net_cfg=None, history=[],
+                              mask=None))
+    with pytest.raises(RuntimeError, match="archive writer thread failed"):
+        w.close({"field_order": ["f"]})
+
+
+def test_batched_on_entry_callback():
+    seen = []
+    arc = batched_engine.compress(
+        FIELDS, 1e-3, config=_cfg("batched", group_size=1),
+        on_entry=lambda name, entry: seen.append(name))
+    assert sorted(seen) == sorted(NAMES)
+    assert A.dumps(arc["fields"]) == A.dumps(_serial_arc(FIELDS)["fields"])
