@@ -12,6 +12,11 @@ hardware-dependent: on a core-starved CI box both engines are bound by the
 same total FLOPs and the ratio hovers near 1; the dispatch-count column is
 the structural, hardware-independent win (the batched engine issues O(groups)
 dispatches instead of O(fields x epochs) sync'd round trips).
+
+The ``conv_stage/`` rows guard the shared conventional stage the same way:
+every engine must compress a multi-field snapshot in fewer conv-stage
+compressor calls than fields (same-(shape, dtype) groups run fused), and the
+smoke profile fails outright on a regression to per-field dispatch.
 """
 from __future__ import annotations
 
@@ -38,19 +43,52 @@ def _engine_rows(num_fields: int, shape, epoch_grid, repeats: int = 3):
         # field); batched: one fused dispatch + one inference per group.
         d_serial = num_fields * (epochs + 1)
         d_batched = 2 * len(flds)  # group_size=1 -> one group per field
+        conv_s = arc_s["timing"]["conv_stage"]
+        conv_b = arc_b["timing"]["conv_stage"]
         common.csv_row(
             f"engine/fields{num_fields}/ep{epochs}",
             t_batched * 1e6,
             f"serial_s={t_serial:.3f};batched_s={t_batched:.3f};"
             f"speedup={t_serial / t_batched:.2f};bit_identical={ident};"
-            f"dispatches_serial={d_serial};dispatches_batched={d_batched}")
+            f"dispatches_serial={d_serial};dispatches_batched={d_batched};"
+            f"conv_calls_serial={conv_s['calls']};"
+            f"conv_calls_batched={conv_b['calls']}")
+
+
+def _conv_stage_guard(num_fields: int = 4, shape=(8, 16, 16)):
+    """Dispatch-count regression guard for the shared conventional stage.
+
+    Every engine compresses the same multi-field snapshot; the conv stage
+    must batch same-(shape, dtype) fields, i.e. use strictly fewer
+    compressor calls than fields.  A regression to per-field dispatch
+    raises, which fails the smoke run.
+    """
+    flds = common.snapshot_fields(num_fields, shape=shape)
+    for engine in ("serial", "batched", "streaming"):
+        cfg = core.NeurLZConfig(epochs=1, mode="strict", engine=engine)
+        t0 = time.time()
+        arc = core.compress(flds, rel_eb=1e-3, config=cfg)
+        st = arc["timing"]["conv_stage"]
+        common.csv_row(
+            f"conv_stage/{engine}/fields{num_fields}",
+            (time.time() - t0) * 1e6,
+            f"groups={st['groups']};calls={st['calls']};"
+            f"batched_fields={st['batched_fields']};"
+            f"fallback_fields={st['fallback_fields']};conv_s={st['conv_s']:.3f}")
+        if st["calls"] >= st["fields"]:
+            raise RuntimeError(
+                f"conv-stage dispatch regression: engine={engine!r} used "
+                f"{st['calls']} compressor calls for {st['fields']} fields "
+                "(the batched conventional stage should need fewer)")
 
 
 def run(full: bool = False, smoke: bool = False):
     if smoke:
         # CI regression profile: tiny fields, single epoch point; fails fast
-        # if the engines diverge or the pipeline breaks.
+        # if the engines diverge, the pipeline breaks, or the conventional
+        # stage regresses to per-field dispatch counts.
         _engine_rows(4, (8, 16, 16), [1, 2], repeats=1)
+        _conv_stage_guard(4, (8, 16, 16))
         return
 
     sizes = [(16, 32, 32), (24, 40, 40), (32, 48, 48)]
@@ -81,6 +119,7 @@ def run(full: bool = False, smoke: bool = False):
 
     # Multi-field engine comparison (the batched-engine acceptance rows).
     _engine_rows(4, (16, 32, 32), [1, 5, 20])
+    _conv_stage_guard(4, (16, 32, 32))
     if full:
         _engine_rows(8, (16, 32, 32), [1, 5])
 

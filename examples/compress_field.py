@@ -16,8 +16,18 @@ import numpy as np
 from repro import compressors as C
 from repro import core
 from repro import streaming
+from repro.compressors import registry
 from repro.core import metrics
 from repro.data import fields as F
+
+
+def list_compressors() -> None:
+    """Print the compressor registry (names, capabilities, archive kinds)."""
+    print(f"{'name':18s} {'kind':10s} {'batchable':9s} {'dtypes':18s} description")
+    for e in registry.entries():
+        dts = ",".join(e.dtypes)
+        print(f"{e.name:18s} {e.kind:10s} {str(e.batchable):9s} {dts:18s} "
+              f"{e.description}")
 
 
 def main():
@@ -30,7 +40,10 @@ def main():
     ap.add_argument("--mode", default="strict",
                     choices=["strict", "relaxed", "unregulated"])
     ap.add_argument("--compressor", default="szlike",
-                    choices=["szlike", "szlike-lorenzo", "zfplike"])
+                    choices=registry.names(),
+                    help="conventional stage (any registered compressor)")
+    ap.add_argument("--list-compressors", action="store_true",
+                    help="print the compressor registry and exit")
     ap.add_argument("--engine", default="batched",
                     choices=["serial", "batched", "streaming"],
                     help="batched = multi-field fused-dispatch engine; "
@@ -41,6 +54,10 @@ def main():
                          "(0 = track peak only, no ceiling)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+
+    if args.list_compressors:
+        list_compressors()
+        return
 
     shape = tuple(int(s) for s in args.shape.split(","))
     flds = F.make_fields(args.dataset, shape=shape, seed=0)
@@ -67,6 +84,12 @@ def main():
     else:
         arc = core.compress(flds, rel_eb=args.eb, config=cfg)
         nbytes = core.save(path, arc)
+    cs = arc["timing"].get("conv_stage")
+    if cs:
+        print(f"[conv]     {cs['fields']} fields -> {cs['groups']} groups, "
+              f"{cs['calls']} compressor calls "
+              f"({cs['batched_fields']} batched / "
+              f"{cs['fallback_fields']} per-field), {cs['conv_s']:.2f}s")
     rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
     rss_b = rss if sys.platform == "darwin" else rss * 1024
     print(f"[archive]  {path}  ({nbytes/2**20:.2f} MiB on disk, "

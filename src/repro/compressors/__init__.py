@@ -3,36 +3,33 @@
 FP64 scientific data (Miranda) needs double-precision reconstruction, so the
 compression stack runs with x64 enabled.  Model code always passes explicit
 dtypes and is unaffected.
+
+Dispatch goes through the pluggable registry (:mod:`repro.compressors.registry`):
+``compress`` resolves a registered compressor by name, ``decompress`` /
+``archive_nbytes`` resolve the archive's ``kind`` tag, and unknown names or
+kinds are hard errors.  Register additional compressors with
+``registry.register(registry.CompressorEntry(...))``.
 """
 import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from . import codec, entropy, outliers, szlike, zfplike  # noqa: E402,F401
+from . import codec, entropy, outliers, registry, szlike, zfplike  # noqa: E402,F401
 from .quantize import abs_bound_from_rel  # noqa: E402,F401
+
+registry._register_builtins()
 
 
 def compress(x, rel_eb=None, *, abs_eb=None, compressor="szlike", **kw):
-    """Dispatch helper: ``compressor`` in {szlike, szlike-lorenzo, zfplike}."""
-    if compressor == "szlike":
-        return szlike.compress(x, rel_eb, abs_eb=abs_eb, **kw)
-    if compressor == "szlike-lorenzo":
-        cfg = kw.pop("config", szlike.SZLikeConfig(predictor="lorenzo"))
-        return szlike.compress(x, rel_eb, abs_eb=abs_eb, config=cfg, **kw)
-    if compressor == "zfplike":
-        return zfplike.compress(x, rel_eb, abs_eb=abs_eb, **kw)
-    raise ValueError(f"unknown compressor {compressor!r}")
+    """Dispatch helper over the registry (built-ins: szlike, szlike-lorenzo,
+    zfplike)."""
+    return registry.compress(x, rel_eb, abs_eb=abs_eb, compressor=compressor,
+                             **kw)
 
 
 def decompress(arc: dict):
-    if arc["kind"] == "szlike":
-        return szlike.decompress(arc)
-    if arc["kind"] == "zfplike":
-        return zfplike.decompress(arc)
-    raise ValueError(f"unknown archive kind {arc['kind']!r}")
+    return registry.decompress(arc)
 
 
 def archive_nbytes(arc: dict) -> int:
-    if arc["kind"] == "szlike":
-        return szlike.archive_nbytes(arc)
-    return zfplike.archive_nbytes(arc)
+    return registry.archive_nbytes(arc)

@@ -1,0 +1,190 @@
+"""Pluggable conventional-compressor registry.
+
+The old dispatch was an if/elif chain over hardcoded names, and
+``archive_nbytes`` silently fell through to the zfplike accounting for any
+archive kind it did not recognize.  This module replaces both with explicit
+registration: a compressor registers its name, capability metadata and entry
+points once, and every engine (serial / batched / streaming) resolves it
+through the same table.  Third-party compressors become a
+:func:`register` call instead of a core edit:
+
+    from repro.compressors import registry
+
+    registry.register(registry.CompressorEntry(
+        name="mylz", kind="mylz",
+        compress=my_compress,          # (x, rel_eb, *, abs_eb=None, **kw)
+        decompress=my_decompress,      # (arc) -> np.ndarray
+        archive_nbytes=my_nbytes,      # (arc) -> int
+    ))
+
+Capability metadata drives the batched conventional stage
+(:mod:`repro.core.conv_stage`): an entry that provides
+``compress_batched`` declares that compressing a stacked ``[F, ...]``
+group of same-shape/same-dtype fields yields payloads **byte-identical**
+to ``F`` per-field calls (the bit-stable-lowering contract — conventional
+archives must match across engines).  Entries without it always run
+per-field.
+
+Archive *kinds* are registered separately from compressor names because
+several compressors may share an archive format (``szlike`` and
+``szlike-lorenzo`` both emit ``kind="szlike"``); decode-side dispatch
+(``decompress`` / ``archive_nbytes``) goes by the archive's ``kind`` tag.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorEntry:
+    """One registered conventional compressor.
+
+    ``compress(x, rel_eb, *, abs_eb=None, **kw) -> (archive_dict, rec)``
+    must uphold the determinism contract: the returned reconstruction is
+    bit-identical to what ``decompress(archive_dict)`` produces (NeurLZ
+    trains its enhancer against the encoder-side reconstruction).
+
+    ``compress_batched(xs, rel_eb, *, abs_eb=None) -> list[(arc, rec)]``
+    (optional) takes a stacked ``[F, ...]`` array of same-shape/same-dtype
+    fields and must return per-field archives whose payloads are
+    byte-identical to ``F`` independent ``compress`` calls — the capability
+    that unlocks the fused conv-stage group dispatch.
+    """
+
+    name: str
+    kind: str                                # archive "kind" tag it emits
+    compress: Callable
+    decompress: Callable
+    archive_nbytes: Callable
+    compress_batched: Callable | None = None
+    dtypes: tuple = ("float32", "float64")   # dtypes the batched path covers
+    deterministic: bool = True               # encoder rec == decoder output
+    description: str = ""
+
+    @property
+    def batchable(self) -> bool:
+        return self.compress_batched is not None
+
+    def batch_supports(self, dtype) -> bool:
+        return self.batchable and str(np.dtype(dtype)) in self.dtypes
+
+
+_COMPRESSORS: dict[str, CompressorEntry] = {}
+_KINDS: dict[str, CompressorEntry] = {}
+
+
+def register(entry: CompressorEntry, *, overwrite: bool = False) -> CompressorEntry:
+    """Register a compressor (and its archive kind, if new).
+
+    Entries sharing an archive ``kind`` must agree on the decode-side entry
+    points — the first registration of a kind owns its ``decompress`` /
+    ``archive_nbytes`` dispatch.
+    """
+    if entry.name in _COMPRESSORS and not overwrite:
+        raise ValueError(f"compressor {entry.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    owner = _KINDS.get(entry.kind)
+    if owner is not None and owner.name != entry.name and (
+            owner.decompress is not entry.decompress
+            or owner.archive_nbytes is not entry.archive_nbytes):
+        raise ValueError(
+            f"archive kind {entry.kind!r} is owned by {owner.name!r} with "
+            "different decode entry points; kinds must decode unambiguously")
+    _COMPRESSORS[entry.name] = entry
+    if owner is None or owner.name == entry.name:
+        _KINDS[entry.kind] = entry
+    return entry
+
+
+def unregister(name: str) -> None:
+    entry = _COMPRESSORS.pop(name, None)
+    if entry is not None and _KINDS.get(entry.kind) is entry:
+        # Hand the kind to any remaining entry that shares it.
+        del _KINDS[entry.kind]
+        for other in _COMPRESSORS.values():
+            if other.kind == entry.kind:
+                _KINDS[entry.kind] = other
+                break
+
+
+def get(name: str) -> CompressorEntry:
+    try:
+        return _COMPRESSORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown compressor {name!r} (registered: {sorted(_COMPRESSORS)})"
+        ) from None
+
+
+def for_archive(arc: dict) -> CompressorEntry:
+    """Resolve the entry owning an archive dict's ``kind`` tag."""
+    kind = arc.get("kind")
+    try:
+        return _KINDS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown archive kind {kind!r} (registered: {sorted(_KINDS)})"
+        ) from None
+
+
+def names() -> list[str]:
+    return sorted(_COMPRESSORS)
+
+
+def entries() -> list[CompressorEntry]:
+    return [_COMPRESSORS[n] for n in names()]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch helpers (the public compressors.* API routes through these)
+# ---------------------------------------------------------------------------
+
+def compress(x, rel_eb=None, *, abs_eb=None, compressor="szlike", **kw):
+    return get(compressor).compress(x, rel_eb, abs_eb=abs_eb, **kw)
+
+
+def decompress(arc: dict):
+    return for_archive(arc).decompress(arc)
+
+
+def archive_nbytes(arc: dict) -> int:
+    # No fall-through: an unknown kind is a hard error (it used to be
+    # silently accounted with the zfplike layout).
+    return for_archive(arc).archive_nbytes(arc)
+
+
+def _register_builtins() -> None:
+    """Built-in compressors; imported lazily so this module stays cheap to
+    import from documentation/tooling contexts."""
+    from . import szlike, zfplike
+
+    def _lorenzo_compress(x, rel_eb=None, *, abs_eb=None, **kw):
+        cfg = kw.pop("config", szlike.SZLikeConfig(predictor="lorenzo"))
+        return szlike.compress(x, rel_eb, abs_eb=abs_eb, config=cfg, **kw)
+
+    def _lorenzo_batched(xs, rel_eb=None, *, abs_eb=None, **kw):
+        cfg = kw.pop("config", szlike.SZLikeConfig(predictor="lorenzo"))
+        return szlike.compress_batched(xs, rel_eb, abs_eb=abs_eb, config=cfg,
+                                       **kw)
+
+    register(CompressorEntry(
+        name="szlike", kind="szlike",
+        compress=szlike.compress, decompress=szlike.decompress,
+        archive_nbytes=szlike.archive_nbytes,
+        compress_batched=szlike.compress_batched,
+        description="SZ3-style multilevel cubic-interpolation predictor"))
+    register(CompressorEntry(
+        name="szlike-lorenzo", kind="szlike",
+        compress=_lorenzo_compress, decompress=szlike.decompress,
+        archive_nbytes=szlike.archive_nbytes,
+        compress_batched=_lorenzo_batched,
+        description="cuSZ-style dual-quantization Lorenzo predictor"))
+    register(CompressorEntry(
+        name="zfplike", kind="zfplike",
+        compress=zfplike.compress, decompress=zfplike.decompress,
+        archive_nbytes=zfplike.archive_nbytes,
+        compress_batched=zfplike.compress_batched,
+        description="ZFP-style block-transform with exact correction pass"))

@@ -221,18 +221,84 @@ def _interp_run(x: jnp.ndarray, eb: float, level: int, phases, mean: float,
     return rec, None
 
 
+def _interp_encode_batched(xs: jnp.ndarray, ebs: np.ndarray, level: int,
+                           phases, means: np.ndarray, out_dtype):
+    """Stacked-``[F, ...]`` mirror of :func:`_interp_run`'s encode branch.
+
+    Runs the *same eager op sequence* as the per-field path with a leading
+    field axis (per-field error bounds/means broadcast as ``[F, 1, ...]``).
+    Elementwise jnp ops are bit-deterministic per element, so every field's
+    slice of every phase equals the per-field run exactly — deliberately NOT
+    jitted: fusing the float math can contract multiply-adds (FMA) and break
+    the cross-engine byte-identity contract.
+
+    Returns ``(rec [F, ...], [(codes, masks, lits)] per field)`` with the
+    per-field streams concatenated in the per-field path's phase order.
+    """
+    nf = xs.shape[0]
+    fshape = xs.shape[1:]
+    bcast = (nf,) + (1,) * len(fshape)
+    eb = jnp.asarray(np.asarray(ebs, np.float64).reshape(bcast))
+    rec = jnp.broadcast_to(
+        jnp.asarray(np.asarray(means, np.float64).reshape(bcast)).astype(xs.dtype),
+        xs.shape)
+
+    phase_codes, phase_masks, phase_lits = [], [], []
+
+    def step(target_vals, pred):
+        c, r, u = _quantize_phase(target_vals, pred, eb, out_dtype)
+        un = np.asarray(u)
+        vals = np.asarray(target_vals)
+        phase_codes.append(np.asarray(c))
+        phase_masks.append(un)
+        # Extract each field's literal escapes now — retaining the full
+        # target values until the end would pin an extra stacked-group copy.
+        phase_lits.append([vals[f][un[f]].ravel() for f in range(nf)])
+        return r
+
+    s0 = 1 << level
+    init_slc = (slice(None),) + tuple(
+        slice(0, 1) if d == 1 else slice(0, None, s0) for d in fshape)
+    r0 = step(xs[init_slc], rec[init_slc])
+    rec = rec.at[init_slc].set(r0)
+
+    for s, axis in phases:
+        tgt, coarse = _phase_slicers(fshape, axis, s)
+        tgt = (slice(None),) + tgt
+        coarse = (slice(None),) + coarse
+        pred = _cubic_midpoint(rec[coarse], axis + 1)
+        if int(np.prod(pred.shape)) == 0:
+            continue
+        r = step(xs[tgt], pred)
+        rec = rec.at[tgt].set(r)
+
+    x_dtype = np.dtype(xs.dtype)
+    streams = []
+    for f in range(nf):
+        codes = [c[f].ravel() for c in phase_codes]
+        masks = [m[f].ravel() for m in phase_masks]
+        lits = [pl[f] for pl in phase_lits]
+        streams.append((
+            np.concatenate(codes) if codes else np.zeros(0, np.int32),
+            np.concatenate(masks) if masks else np.zeros(0, bool),
+            np.concatenate(lits) if lits else np.zeros(0, x_dtype)))
+    return np.asarray(rec), streams
+
+
 # ---------------------------------------------------------------------------
 # Lorenzo (dual-quantization) predictor
 # ---------------------------------------------------------------------------
 
-def lorenzo_delta(q: jnp.ndarray) -> jnp.ndarray:
+def lorenzo_delta(q: jnp.ndarray, axes=None) -> jnp.ndarray:
     """N-D first-order Lorenzo delta of an integer lattice (zero boundary).
 
     Composition of first differences along every axis; exactly invertible by
-    per-axis inclusive prefix sums in integer arithmetic.
+    per-axis inclusive prefix sums in integer arithmetic.  ``axes`` restricts
+    the differencing (the batched conv-stage passes ``range(1, ndim)`` so a
+    stacked field axis is left alone); default is every axis.
     """
     d = q
-    for axis in range(q.ndim):
+    for axis in (range(q.ndim) if axes is None else axes):
         if q.shape[axis] == 1:
             continue
         shifted = jnp.concatenate(
@@ -242,9 +308,9 @@ def lorenzo_delta(q: jnp.ndarray) -> jnp.ndarray:
     return d
 
 
-def lorenzo_undelta(d: jnp.ndarray) -> jnp.ndarray:
+def lorenzo_undelta(d: jnp.ndarray, axes=None) -> jnp.ndarray:
     q = d
-    for axis in range(d.ndim):
+    for axis in (range(d.ndim) if axes is None else axes):
         if d.shape[axis] == 1:
             continue
         q = jnp.cumsum(q, axis=axis, dtype=q.dtype)
@@ -319,6 +385,95 @@ def compress(x: np.ndarray, rel_eb: float | None = None, *, abs_eb: float | None
 
     arc["nbytes"] = archive_nbytes(arc)
     return arc, rec_np.astype(orig_dtype, copy=False)
+
+
+def compress_batched(xs, rel_eb: float | None = None, *,
+                     abs_eb: float | None = None,
+                     config: SZLikeConfig = SZLikeConfig()) -> list:
+    """Compress a group of same-shape/same-dtype fields in one stacked pass.
+
+    The conv-stage batched entry point: the group's whole quantize +
+    reconstruct runs as a single stacked-``[F, ...]`` op sequence (one
+    device-op stream for the group instead of one per field); the host-side
+    entropy stage stays per field.  Payloads are **byte-identical** to ``F``
+    independent :func:`compress` calls — per-field bounds and means are
+    derived exactly as the per-field path does and broadcast along the
+    stacked axis.  Returns ``[(archive, reconstruction), ...]`` in order.
+    """
+    arrs = [np.asarray(x) for x in xs]
+    if not arrs:
+        return []
+    shape, dtype = arrs[0].shape, arrs[0].dtype
+    if any(a.shape != shape or a.dtype != dtype for a in arrs):
+        raise ValueError("compress_batched needs same-shape/same-dtype fields")
+    if arrs[0].ndim not in (2, 3):
+        raise ValueError(f"expected 2-D or 3-D fields, got shape {shape}")
+    if abs_eb is None and rel_eb is None:
+        raise ValueError("pass rel_eb or abs_eb")
+
+    abs_ebs, eb_ints, means, works = [], [], [], []
+    for a in arrs:
+        ae = float(abs_eb) if abs_eb is not None else abs_bound_from_rel(a, rel_eb)
+        abs_ebs.append(float(ae))
+        eb_ints.append(float(ae) * (1.0 - config.eb_margin))
+        w = a.astype(np.float64 if _INTERNAL == jnp.float64 else np.float32)
+        finite = w[np.isfinite(w)]
+        means.append(float(finite.mean()) if finite.size else 0.0)
+        works.append(w)
+
+    out = []
+    if config.predictor == "interp":
+        level, phases = _interp_schedule(shape, config.max_level)
+        padded = [_pad_to_lattice(w, level)[0] for w in works]
+        stacked = jnp.asarray(np.stack(padded))
+        recs, streams = _interp_encode_batched(
+            stacked, np.asarray(eb_ints), level, phases, np.asarray(means),
+            jnp.dtype(dtype))
+        crop = tuple(slice(0, d) for d in shape)
+        for f in range(len(arrs)):
+            codes, masks, lits = streams[f]
+            arc = {
+                "kind": "szlike", "predictor": "interp", "level": level,
+                "shape": list(shape), "pad_shape": list(padded[f].shape),
+                "dtype": str(dtype), "abs_eb": abs_ebs[f],
+                "eb_int": eb_ints[f], "mean": means[f],
+                "codes": entropy.encode_codes(codes, config.zstd_level),
+                "unpred": _encode_mask(masks, config.zstd_level),
+                "literals": entropy.encode_floats(lits, config.zstd_level),
+            }
+            arc["nbytes"] = archive_nbytes(arc)
+            out.append((arc, recs[f][crop].astype(dtype, copy=False)))
+    elif config.predictor == "lorenzo":
+        stacked = jnp.asarray(np.stack(works))
+        bcast = (len(arrs),) + (1,) * len(shape)
+        eb_arr = jnp.asarray(np.asarray(eb_ints, np.float64).reshape(bcast))
+        step = 2.0 * eb_arr
+        q = jnp.round(stacked / step)
+        unpred = (jnp.abs(q) >= CODE_CAP) | ~jnp.isfinite(stacked)
+        qi = jnp.where(unpred, 0, q).astype(jnp.int32)
+        rec = qi.astype(stacked.dtype) * step
+        cast_bad = jnp.abs(rec.astype(jnp.dtype(dtype)).astype(rec.dtype)
+                           - stacked) > eb_arr
+        unpred = unpred | cast_bad
+        qi = jnp.where(unpred, 0, qi)
+        d = lorenzo_delta(qi, axes=range(1, qi.ndim))
+        rec = jnp.where(unpred, stacked, qi.astype(stacked.dtype) * step)
+        d_np, un_np, rec_np = np.asarray(d), np.asarray(unpred), np.asarray(rec)
+        for f in range(len(arrs)):
+            lits = works[f][un_np[f]]
+            arc = {
+                "kind": "szlike", "predictor": "lorenzo",
+                "shape": list(shape), "dtype": str(dtype),
+                "abs_eb": abs_ebs[f], "eb_int": eb_ints[f], "mean": means[f],
+                "codes": entropy.encode_codes(d_np[f], config.zstd_level),
+                "unpred": _encode_mask(un_np[f].ravel(), config.zstd_level),
+                "literals": entropy.encode_floats(lits, config.zstd_level),
+            }
+            arc["nbytes"] = archive_nbytes(arc)
+            out.append((arc, rec_np[f].astype(dtype, copy=False)))
+    else:
+        raise ValueError(f"unknown predictor {config.predictor!r}")
+    return out
 
 
 def decompress(arc: dict) -> np.ndarray:

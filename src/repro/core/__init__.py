@@ -11,6 +11,6 @@ import jax
 
 jax.config.update("jax_enable_x64", True)  # FP64 datasets (Miranda)
 
-from . import archive, batched_engine, metrics, online_trainer, regulation, skipping_dnn  # noqa: E402,F401
+from . import archive, batched_engine, conv_stage, metrics, online_trainer, regulation, skipping_dnn  # noqa: E402,F401
 from .neurlz import (NeurLZConfig, assemble_streaming_archive, compress,  # noqa: E402,F401
                      decompress, field_bitrate, load, save)

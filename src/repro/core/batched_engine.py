@@ -58,6 +58,7 @@ import numpy as np
 from .. import compressors
 from ..distributed import sharding as shardlib
 from ..optim import adamw_init, adamw_update, cosine_schedule
+from . import conv_stage as conv_stage_lib
 from . import neurlz, online_trainer, skipping_dnn
 
 
@@ -392,22 +393,22 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
     groups = plan_groups(fields, config)
 
     conv_arcs, recs, ebs = {}, {}, {}
-    conv_time = [0.0]
     conv_dev = _conv_device() if config.prefetch else None
+    # Shared conventional stage: each call batches the handed fields by
+    # (shape, dtype) through the fused compressor entry.
+    stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
+                                     batch=config.conv_batch)
 
     def conv_compress(names):
+        todo = {n: fields[n] for n in names if n not in conv_arcs}
+        if not todo:
+            return
         ctx = jax.default_device(conv_dev) if conv_dev is not None \
             else contextlib.nullcontext()
         with ctx:
-            for name in names:
-                if name in conv_arcs:
-                    continue
-                tc = time.time()
-                arc, rec = compressors.compress(
-                    np.asarray(fields[name]), rel_eb, abs_eb=abs_eb,
-                    compressor=config.compressor)
-                conv_time[0] += time.time() - tc
-                conv_arcs[name], recs[name], ebs[name] = arc, rec, arc["abs_eb"]
+            for name, (arc, rec) in stage.run(todo).items():
+                conv_arcs[name], recs[name], ebs[name] = \
+                    arc, rec, arc["abs_eb"]
 
     # Cross-field aux may reference fields in later groups; resolve the whole
     # conventional stage upfront in that case.  Otherwise it runs lazily per
@@ -422,7 +423,7 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
     if conv_dev is not None and len(train_devs) > 1:
         train_devs = train_devs[:-1]
     t_train0 = time.time()
-    conv_before = conv_time[0]
+    conv_before = stage.stats.conv_s
     # Per-group completion: finalize a group as soon as enough later groups
     # are dispatched to keep every training device's queue non-empty
     # (depth >= devices + 1), instead of holding all groups' tensors until
@@ -447,10 +448,10 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
                         collect_stats, out_fields, on_entry)
     # Conventional compression that ran lazily inside the loop belongs to
     # conv_s, not train_s (keep the two disjoint, like the serial engine).
-    train_time = (time.time() - t_train0) - (conv_time[0] - conv_before)
+    train_time = (time.time() - t_train0) - (stage.stats.conv_s - conv_before)
 
-    timing = {"total_s": time.time() - t0, "conv_s": conv_time[0],
-              "train_s": train_time}
+    timing = {"total_s": time.time() - t0, "conv_s": stage.stats.conv_s,
+              "train_s": train_time, "conv_stage": stage.stats.as_dict()}
     return neurlz.assemble_archive(fields, out_fields, config, timing)
 
 

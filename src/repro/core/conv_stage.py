@@ -1,0 +1,124 @@
+"""Snapshot-batched conventional-compression stage shared by every engine.
+
+The three engines used to carry their own per-field loop around
+``compressors.compress`` (serial: upfront over the snapshot; batched: lazily
+per training group; streaming: per field on the reader side).  This module is
+the one conventional stage they all call now: it plans the fields it is
+handed into groups of identical ``(shape, dtype)`` — the error-bound spec is
+shared per run, so a group is exactly the ISSUE's ``(shape, dtype, eb)``
+unit — and runs each group through the compressor's *batched* entry point
+when its registry entry declares the capability
+(:class:`repro.compressors.registry.CompressorEntry.compress_batched`).
+
+The batched entries execute the group as ONE stacked op sequence (a single
+device-op stream for the whole group instead of one per field) and are
+contractually **byte-identical** to the per-field path, so archives stay
+bit-compatible across engines no matter which path compressed a given field.
+Compressors whose entry does not declare batchability — or whose capability
+metadata excludes the group's dtype — fall back per-field.
+
+:class:`ConvStats` counts how the work was actually dispatched (groups,
+fused calls, per-field fallbacks); engines surface it under
+``timing["conv_stage"]`` and the bench smoke profile fails if a multi-field
+snapshot regresses to per-field call counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping
+
+import numpy as np
+
+from ..compressors import registry
+
+
+@dataclasses.dataclass
+class ConvStats:
+    """How the conventional stage dispatched its work.
+
+    ``calls`` is the structural dispatch count: one per fused group call
+    plus one per per-field fallback — the number the smoke-profile
+    regression guard compares against ``fields``.
+    """
+
+    fields: int = 0
+    groups: int = 0
+    batched_fields: int = 0
+    fallback_fields: int = 0
+    calls: int = 0
+    conv_s: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def plan_groups(metas: Mapping[str, tuple]) -> list[list[str]]:
+    """Group field names by ``(shape, dtype)``, preserving input order.
+
+    ``metas`` maps name -> ``(shape, dtype)``.  Fields of one group can run
+    through a batched compressor entry as a stacked array.
+    """
+    groups: dict[tuple, list[str]] = {}
+    for name, (shape, dtype) in metas.items():
+        groups.setdefault((tuple(shape), str(np.dtype(dtype))),
+                          []).append(name)
+    return list(groups.values())
+
+
+class ConvStage:
+    """Plan/executor for the conventional stage of one compression run.
+
+    Holds the compressor registry entry and the run's error-bound spec;
+    every engine funnels its fields through :meth:`run` (all at once, per
+    training group, or per transient aux load) and reads the accumulated
+    :class:`ConvStats` afterwards.
+    """
+
+    def __init__(self, compressor: str, rel_eb: float | None = None,
+                 abs_eb: float | None = None, *, batch: bool = True):
+        self.entry = registry.get(compressor)   # unknown name -> ValueError
+        self.rel_eb = rel_eb
+        self.abs_eb = abs_eb
+        self.batch = batch
+        self.stats = ConvStats()
+
+    def plan(self, metas: Mapping[str, tuple]) -> list[list[str]]:
+        return plan_groups(metas)
+
+    def run(self, fields: Mapping[str, np.ndarray], *,
+            batch: bool | None = None
+            ) -> dict[str, tuple[dict, np.ndarray]]:
+        """Compress ``fields``; returns ``{name: (archive, reconstruction)}``.
+
+        Same-``(shape, dtype)`` groups go through the fused batched entry
+        when the registry capability allows it; everything else runs
+        per-field.  Output payloads are byte-identical either way.
+        ``batch`` overrides the stage default for this call (the streaming
+        scheduler turns it off when the fused path's working set would not
+        fit its residency budget).
+        """
+        batch = self.batch if batch is None else batch
+        t0 = time.time()
+        out: dict[str, tuple[dict, np.ndarray]] = {}
+        arrs = {n: np.asarray(x) for n, x in fields.items()}
+        metas = {n: (a.shape, a.dtype) for n, a in arrs.items()}
+        for group in self.plan(metas):
+            self.stats.groups += 1
+            dtype = metas[group[0]][1]
+            if (batch and len(group) > 1
+                    and self.entry.batch_supports(dtype)):
+                results = self.entry.compress_batched(
+                    [arrs[n] for n in group], self.rel_eb, abs_eb=self.abs_eb)
+                self.stats.calls += 1
+                self.stats.batched_fields += len(group)
+                out.update(zip(group, results))
+            else:
+                for n in group:
+                    out[n] = self.entry.compress(arrs[n], self.rel_eb,
+                                                 abs_eb=self.abs_eb)
+                    self.stats.calls += 1
+                    self.stats.fallback_fields += 1
+        self.stats.fields += len(arrs)
+        self.stats.conv_s += time.time() - t0
+        return out

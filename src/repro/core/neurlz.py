@@ -43,6 +43,7 @@ import numpy as np
 from .. import compressors
 from ..compressors import outliers as outlier_codec
 from . import archive as arc_io
+from . import conv_stage as conv_stage_lib
 from . import metrics, online_trainer, regulation, skipping_dnn
 
 
@@ -61,6 +62,7 @@ class NeurLZConfig:
     weight_dtype: str = "float32"       # archive precision for DNN weights
     widths: tuple = (4, 4, 6, 6, 8)
     engine: str = "serial"              # serial | batched | streaming
+    conv_batch: bool = True             # snapshot-batched conventional stage
     field_batching: str = "unroll"      # unroll (bit-exact) | vmap (stacked)
     group_size: int = 2                 # fields per batched dispatch (0 = all)
     prefetch: bool = True               # overlap CPU conv stage with training
@@ -185,14 +187,22 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
 
 def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats):
     t0 = time.time()
-    conv_arcs, recs, ebs = {}, {}, {}
-    conv_time = 0.0
-    for name, x in fields.items():
-        tc = time.time()
-        arc, rec = compressors.compress(np.asarray(x), rel_eb, abs_eb=abs_eb,
-                                        compressor=config.compressor)
-        conv_time += time.time() - tc
-        conv_arcs[name], recs[name], ebs[name] = arc, rec, arc["abs_eb"]
+    # Shared conventional stage: the whole snapshot is one plan, so
+    # same-(shape, dtype) fields compress through the fused batched entry.
+    stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
+                                     batch=config.conv_batch)
+    conv = stage.run(fields)
+    conv_arcs = {n: arc for n, (arc, _) in conv.items()}
+    recs = {n: rec for n, (_, rec) in conv.items()}
+    ebs = {n: arc["abs_eb"] for n, arc in conv_arcs.items()}
+
+    # A reconstruction stays resident only until its last consumer (its own
+    # finalize + every field listing it as cross-field aux) is done — the
+    # streaming pipeline's refcount idea in miniature.
+    rec_refs = {n: 1 for n in fields}
+    for n in fields:
+        for a in _aux_names(config, n, fields):
+            rec_refs[a] += 1
 
     out_fields = {}
     train_time = 0.0
@@ -218,9 +228,13 @@ def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats):
                            eb, net_cfg, history, collect_stats)
         finalize_entry(entry, x, recs[name], resid_norm, eb, stats, config)
         out_fields[name] = entry
+        for m in (name, *aux_names):
+            rec_refs[m] -= 1
+            if rec_refs[m] <= 0:
+                recs.pop(m, None)
 
-    timing = {"total_s": time.time() - t0, "conv_s": conv_time,
-              "train_s": train_time}
+    timing = {"total_s": time.time() - t0, "conv_s": stage.stats.conv_s,
+              "train_s": train_time, "conv_stage": stage.stats.as_dict()}
     return assemble_archive(fields, out_fields, config, timing)
 
 

@@ -39,12 +39,14 @@ import threading
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
+from typing import Mapping
 
 import numpy as np
 
 from .. import compressors
 from ..core import archive as arc_io
 from ..core import batched_engine, neurlz, online_trainer
+from ..core import conv_stage as conv_stage_lib
 from . import source as source_lib
 from .writer import AsyncArchiveWriter, EntryTask
 
@@ -202,7 +204,11 @@ def compress(source, sink, rel_eb: float | None = None, *,
     recs: dict[str, np.ndarray] = {}
     ebs: dict[str, float] = {}
     in_flight: deque = deque()
-    conv_time = [0.0]
+    # Shared conventional stage: a training group's freshly loaded fields
+    # compress as one batched plan under the existing residency ledger (the
+    # loaded originals and their reconstructions are already charged).
+    stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
+                                     batch=config.conv_batch)
 
     def group_cost(group) -> dict[str, int]:
         cost = {}
@@ -215,12 +221,30 @@ def compress(source, sink, rel_eb: float | None = None, *,
                                               config.slice_axis)
         return cost
 
-    def conv_one(name: str, x: np.ndarray) -> None:
-        tc = time.time()
-        arc, rec = compressors.compress(np.asarray(x), rel_eb, abs_eb=abs_eb,
-                                        compressor=config.compressor)
-        conv_time[0] += time.time() - tc
-        conv_arcs[name], recs[name], ebs[name] = arc, rec, arc["abs_eb"]
+    def conv_many(arrays: Mapping[str, np.ndarray]) -> None:
+        if not arrays:
+            return
+        # The fused batched path materializes group-sized working copies
+        # (float64 casts, the stacked array, code/mask planes); charge an
+        # envelope for them so the fused dispatch respects the budget.  If
+        # it cannot fit even after retiring in-flight groups, fall back to
+        # per-field compression — one field's transients at a time, the
+        # historical (uncharged) envelope.
+        use_batch = len(arrays) > 1 and config.conv_batch
+        if use_batch:
+            tmp = 3 * sum(np.asarray(a).size * 8 for a in arrays.values())
+            while not ledger.fits(tmp) and in_flight:
+                retire(in_flight.popleft())
+            if ledger.fits(tmp):
+                ledger.add("convtmp", tmp)
+            else:
+                use_batch = False
+        try:
+            out = stage.run(arrays, batch=use_batch)
+        finally:
+            ledger.drop("convtmp")
+        for name, (arc, rec) in out.items():
+            conv_arcs[name], recs[name], ebs[name] = arc, rec, arc["abs_eb"]
 
     def unref_rec(name: str) -> None:
         rec_refs[name] -= 1
@@ -268,12 +292,12 @@ def compress(source, sink, rel_eb: float | None = None, *,
         cost = {f"rec:{name}": metas[name].nbytes,
                 f"tmpx:{name}": metas[name].nbytes}
         admit(cost, f"aux reconstruction of {name!r}")
-        conv_one(name, src.load(name))
+        conv_many({name: src.load(name)})
         ledger.drop(f"tmpx:{name}")
 
     prefetched = None           # (group, future, cost) for order[i+1]
     t_train0 = time.time()
-    conv_before = conv_time[0]
+    conv_before = stage.stats.conv_s
     try:
         for gi, group in enumerate(order):
             if prefetched is not None and prefetched[0] is group:
@@ -283,11 +307,13 @@ def compress(source, sink, rel_eb: float | None = None, *,
                 arrays = {n: src.load(n) for n in group.names}
             prefetched = None
             xs.update(arrays)
+            # Conv-compress the group's own fields first (fused, from the
+            # already-loaded arrays) so an in-group aux producer never takes
+            # the transient-reload path below.
+            conv_many({n: xs[n] for n in group.names if n not in recs})
             for name in group.names:
                 for a in aux_map[name]:
                     ensure_aux_rec(a)
-                if name not in recs:
-                    conv_one(name, xs[name])
             state = batched_engine._prepare_group(
                 group, _SnapshotView({n: xs[n] for n in group.names}, names),
                 recs, ebs, config, tcfg)
@@ -312,14 +338,16 @@ def compress(source, sink, rel_eb: float | None = None, *,
                     prefetched = (nxt, fut, cost)
         while in_flight:
             retire(in_flight.popleft())
-        train_time = (time.time() - t_train0) - (conv_time[0] - conv_before)
+        train_time = (time.time() - t_train0) \
+            - (stage.stats.conv_s - conv_before)
 
         timing = {
             "total_s": time.time() - t0,
-            "conv_s": conv_time[0],
+            "conv_s": stage.stats.conv_s,
             "train_s": train_time,
             "peak_resident_bytes": ledger.peak,
             "max_resident_bytes": budget,
+            "conv_stage": stage.stats.as_dict(),
         }
         meta = {
             "field_order": names,
