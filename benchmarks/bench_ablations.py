@@ -7,6 +7,7 @@ import time
 from . import common
 from repro import core
 from repro.core import metrics
+from repro.core import neurlz
 from repro.data import fields as F
 
 
@@ -31,8 +32,8 @@ def run(full: bool = False):
         sub = dict(base_sub) if kw.get("cross_field") else {target: flds[target]}
         cfg = core.NeurLZConfig(epochs=epochs, mode="relaxed", **kw)
         t0 = time.time()
-        arc = core.compress(sub, rel_eb=1e-2, config=cfg)
-        dec = core.decompress(arc)
+        arc = neurlz.compress_impl(sub, rel_eb=1e-2, config=cfg)
+        dec = neurlz.decompress_impl(arc)
         p = metrics.psnr(flds[target], dec[target])
         common.csv_row(f"fig4/{label}", (time.time() - t0) * 1e6,
                        f"psnr={p:.2f};epochs={epochs}")

@@ -20,12 +20,16 @@ smoke profile fails outright on a regression to per-field dispatch.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 from . import common
 from repro import compressors as C
 from repro import core
 from repro.core import archive as arc_io
+from repro.core import neurlz
+from repro.core.archive_api import Archive
 from repro.data import fields as F
 
 
@@ -67,7 +71,7 @@ def _conv_stage_guard(num_fields: int = 4, shape=(8, 16, 16)):
     for engine in ("serial", "batched", "streaming"):
         cfg = core.NeurLZConfig(epochs=1, mode="strict", engine=engine)
         t0 = time.time()
-        arc = core.compress(flds, rel_eb=1e-3, config=cfg)
+        arc = neurlz.compress_impl(flds, rel_eb=1e-3, config=cfg)
         st = arc["timing"]["conv_stage"]
         common.csv_row(
             f"conv_stage/{engine}/fields{num_fields}",
@@ -82,13 +86,60 @@ def _conv_stage_guard(num_fields: int = 4, shape=(8, 16, 16)):
                 "(the batched conventional stage should need fewer)")
 
 
+def _random_access_rows(num_fields: int = 4, shape=(8, 16, 16),
+                        epochs: int = 1):
+    """Single-field random-access decode latency vs full ``decompress``.
+
+    The ``Archive`` handle's pitch is that decoding one field of a
+    streaming container costs one entry's aux closure, not the snapshot.
+    This row measures both paths against the same on-disk container and
+    reports the entry-read accounting alongside wall clock, so a
+    regression to eager whole-archive materialization shows up as
+    ``entries_read`` jumping to ``num_fields``.
+    """
+    from repro.streaming import pipeline as streaming
+
+    flds = common.snapshot_fields(num_fields, shape=shape)
+    cfg = core.NeurLZConfig(epochs=epochs, mode="strict", engine="streaming")
+    fd, path = tempfile.mkstemp(suffix=".nlzs")
+    os.close(fd)
+    try:
+        streaming.compress(flds, path, rel_eb=1e-3, config=cfg)
+        target = next(iter(flds))
+        with Archive.open(path) as arc:     # warm the jit caches
+            arc.decode(target)
+        t0 = time.time()
+        with Archive.open(path) as arc:
+            arc.decode(target)
+            reads = len(arc.reader.entry_reads)
+        t_one = time.time() - t0
+        t0 = time.time()
+        full_dec = dict(streaming.iter_decompress(path))
+        t_full = time.time() - t0
+        common.csv_row(
+            f"archive/random_access/fields{num_fields}",
+            t_one * 1e6,
+            f"one_field_s={t_one:.3f};full_s={t_full:.3f};"
+            f"speedup={t_full / max(t_one, 1e-9):.2f};"
+            f"entries_read={reads};fields={len(full_dec)}")
+        if reads >= num_fields:
+            raise RuntimeError(
+                f"random-access decode regression: decoding one field read "
+                f"{reads} entries of a {num_fields}-field container "
+                "(lazy decode should read only the aux closure)")
+    finally:
+        os.unlink(path)
+
+
 def run(full: bool = False, smoke: bool = False):
     if smoke:
         # CI regression profile: tiny fields, single epoch point; fails fast
-        # if the engines diverge, the pipeline breaks, or the conventional
-        # stage regresses to per-field dispatch counts.
+        # if the engines diverge, the pipeline breaks, the conventional
+        # stage regresses to per-field dispatch counts, or single-field
+        # random access regresses to whole-archive decode.
         _engine_rows(4, (8, 16, 16), [1, 2], repeats=1)
         _conv_stage_guard(4, (8, 16, 16))
+        _random_access_rows(4, (8, 16, 16))
         return
 
     sizes = [(16, 32, 32), (24, 40, 40), (32, 48, 48)]
@@ -120,6 +171,7 @@ def run(full: bool = False, smoke: bool = False):
     # Multi-field engine comparison (the batched-engine acceptance rows).
     _engine_rows(4, (16, 32, 32), [1, 5, 20])
     _conv_stage_guard(4, (16, 32, 32))
+    _random_access_rows(4, (16, 32, 32), epochs=2)
     if full:
         _engine_rows(8, (16, 32, 32), [1, 5])
 

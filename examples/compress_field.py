@@ -1,9 +1,11 @@
 """End-to-end NeurLZ driver (the paper's workload): multi-field block,
-cross-field learning, strict error regulation, archive on disk, full
-validation report.
+cross-field learning, per-field error bounds, strict error regulation,
+archive on disk, full validation report — on the first-class session API
+(``repro.NeurLZ`` / ``repro.Archive``).
 
     PYTHONPATH=src python examples/compress_field.py [--dataset nyx]
         [--shape 32,48,48] [--eb 1e-3] [--epochs 8] [--mode strict]
+        [--field-eb name=1e-2 --field-eb other=abs:0.5:relaxed]
 """
 import argparse
 import os
@@ -13,9 +15,7 @@ import tempfile
 
 import numpy as np
 
-from repro import compressors as C
-from repro import core
-from repro import streaming
+import repro
 from repro.compressors import registry
 from repro.core import metrics
 from repro.data import fields as F
@@ -23,11 +23,36 @@ from repro.data import fields as F
 
 def list_compressors() -> None:
     """Print the compressor registry (names, capabilities, archive kinds)."""
-    print(f"{'name':18s} {'kind':10s} {'batchable':9s} {'dtypes':18s} description")
+    print(f"{'name':18s} {'kind':10s} {'batchable':9s} {'dec_batch':9s} "
+          f"{'dtypes':18s} description")
     for e in registry.entries():
         dts = ",".join(e.dtypes)
-        print(f"{e.name:18s} {e.kind:10s} {str(e.batchable):9s} {dts:18s} "
-              f"{e.description}")
+        print(f"{e.name:18s} {e.kind:10s} {str(e.batchable):9s} "
+              f"{str(e.decode_batchable):9s} {dts:18s} {e.description}")
+
+
+def parse_field_eb(spec: str) -> tuple[str, repro.ErrorBound]:
+    """``name=1e-2`` (relative) | ``name=abs:0.5`` | ``name=1e-3:relaxed``
+    | ``name=abs:0.5:strict`` -> per-field ErrorBound."""
+    name, _, rest = spec.partition("=")
+    if not rest:
+        raise argparse.ArgumentTypeError(f"bad --field-eb {spec!r}")
+    parts = rest.split(":")
+    kind = "rel"
+    if parts[0] in ("rel", "abs"):
+        kind = parts.pop(0)
+    if not parts:
+        raise argparse.ArgumentTypeError(
+            f"bad --field-eb {spec!r}: missing bound value after {kind!r}")
+    try:
+        value = float(parts.pop(0))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"bad --field-eb {spec!r}: bound value must be a number")
+    mode = parts.pop(0) if parts else None
+    return name, repro.ErrorBound(rel=value if kind == "rel" else None,
+                                  abs=value if kind == "abs" else None,
+                                  mode=mode)
 
 
 def main():
@@ -35,7 +60,12 @@ def main():
     ap.add_argument("--dataset", default="nyx",
                     choices=["nyx", "miranda", "hurricane"])
     ap.add_argument("--shape", default="32,48,48")
-    ap.add_argument("--eb", type=float, default=1e-3)
+    ap.add_argument("--eb", type=float, default=1e-3,
+                    help="default value-range-relative bound")
+    ap.add_argument("--field-eb", action="append", default=[],
+                    metavar="NAME=[rel:|abs:]VALUE[:MODE]",
+                    help="per-field bound override (repeatable), e.g. "
+                         "velocity_x=1e-2 or temperature=abs:0.5:relaxed")
     ap.add_argument("--epochs", type=int, default=8)
     ap.add_argument("--mode", default="strict",
                     choices=["strict", "relaxed", "unregulated"])
@@ -52,6 +82,9 @@ def main():
     ap.add_argument("--max-resident-mb", type=float, default=0.0,
                     help="streaming engine residency budget in MiB "
                          "(0 = track peak only, no ceiling)")
+    ap.add_argument("--decode-field", default=None,
+                    help="also time a lazy single-field random-access "
+                         "decode of this field (streaming archives)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -62,28 +95,40 @@ def main():
     shape = tuple(int(s) for s in args.shape.split(","))
     flds = F.make_fields(args.dataset, shape=shape, seed=0)
     cross = F.DEFAULT_CROSS_FIELD[args.dataset]
+    try:
+        bounds = dict(parse_field_eb(s) for s in args.field_eb)
+    except argparse.ArgumentTypeError as exc:
+        ap.error(str(exc))
 
-    cfg = core.NeurLZConfig(compressor=args.compressor, mode=args.mode,
-                            epochs=args.epochs, cross_field=cross,
-                            engine=args.engine,
-                            max_resident_bytes=int(args.max_resident_mb
-                                                   * 2**20))
+    sess = repro.NeurLZ(
+        model=repro.ModelConfig(epochs=args.epochs, cross_field=cross),
+        engine=repro.EngineConfig(
+            engine=args.engine, compressor=args.compressor,
+            max_resident_bytes=int(args.max_resident_mb * 2**20)),
+        regulation=repro.RegulationConfig(mode=args.mode))
     print(f"[compress] {args.dataset} {shape} eb={args.eb} mode={args.mode} "
-          f"epochs={args.epochs} cross_field=on engine={args.engine}")
-    path = args.out or os.path.join(tempfile.gettempdir(),
-                                    f"{args.dataset}.nlz")
+          f"epochs={args.epochs} cross_field=on engine={args.engine}"
+          + (f" field_eb={ {n: (b.rel, b.abs, b.mode) for n, b in bounds.items()} }"
+             if bounds else ""))
+    path = args.out or os.path.join(
+        tempfile.gettempdir(),
+        f"{args.dataset}.nlzs" if args.engine == "streaming"
+        else f"{args.dataset}.nlz")
     if args.engine == "streaming":
-        # Full out-of-core path: incremental container straight to disk.
-        report = streaming.compress(flds, path, rel_eb=args.eb, config=cfg)
-        arc = core.load(path)
+        # Full out-of-core path: incremental container straight to disk,
+        # reopened as a *lazy* Archive handle (no field materializes until
+        # decoded).
+        arc = sess.compress_to(flds, path, bounds=bounds or None,
+                               rel_eb=args.eb)
+        report = arc.report
         nbytes = report["bytes_written"]
         print(f"[resident] pipeline peak {report['peak_resident_bytes']/2**20:.2f} MiB"
-              + (f" (budget {cfg.max_resident_bytes/2**20:.2f} MiB)"
-                 if cfg.max_resident_bytes else " (no ceiling)")
+              + (f" (budget {args.max_resident_mb:.2f} MiB)"
+                 if args.max_resident_mb else " (no ceiling)")
               + f", writer busy {report['writer_busy_s']:.2f}s")
     else:
-        arc = core.compress(flds, rel_eb=args.eb, config=cfg)
-        nbytes = core.save(path, arc)
+        arc = sess.compress(flds, bounds=bounds or None, rel_eb=args.eb)
+        nbytes = arc.save(path)
     cs = arc["timing"].get("conv_stage")
     if cs:
         print(f"[conv]     {cs['fields']} fields -> {cs['groups']} groups, "
@@ -95,25 +140,35 @@ def main():
     print(f"[archive]  {path}  ({nbytes/2**20:.2f} MiB on disk, "
           f"process peak RSS {rss_b/2**20:.0f} MiB)")
 
-    dec_engine = "serial" if args.engine == "streaming" else args.engine
-    # The streaming branch already loaded (and reassembled) the archive from
-    # disk above; the others decode from disk here to prove the round-trip.
-    arc_disk = arc if args.engine == "streaming" else core.load(path)
-    dec = core.decompress(arc_disk, engine=dec_engine)
+    # Decode from disk to prove the round-trip (lazy open for streaming).
+    with repro.Archive.open(path) as arc_disk:
+        if args.decode_field:
+            import time
+            t0 = time.time()
+            one = arc_disk.decode(args.decode_field)
+            t1 = time.time() - t0
+            reads = (len(arc_disk.reader.entry_reads)
+                     if arc_disk.streaming else len(flds))
+            print(f"[random]   decode({args.decode_field!r}) {t1*1e3:.0f} ms, "
+                  f"{reads} entr{'y' if reads == 1 else 'ies'} read, "
+                  f"{one.nbytes/2**20:.2f} MiB out")
+        dec = sess.decompress(arc_disk)
     raw = sum(v.nbytes for v in flds.values())
-    total = sum(arc["bitrate"][n]["total_bytes"] for n in flds)
+    br = arc.bitrate()
+    total = sum(br[n]["total_bytes"] for n in flds)
     print(f"[totals]   raw {raw/2**20:.1f} MiB -> {total/2**20:.2f} MiB "
           f"(CR {raw/total:.1f}x)")
     for name, x in flds.items():
-        eb = arc["fields"][name]["abs_eb"]
+        entry = arc["fields"][name]
+        eb = entry["abs_eb"]
+        mode = entry["mode"]
         err = np.abs(dec[name].astype(np.float64) - x.astype(np.float64)).max()
-        conv = C.decompress(arc["fields"][name]["conv"])
-        br = arc["bitrate"][name]
-        print(f"  {name:22s} maxerr/eb={err/eb:6.3f}  "
+        conv = registry.decompress(entry["conv"])
+        print(f"  {name:22s} [{mode:11s}] maxerr/eb={err/eb:6.3f}  "
               f"PSNR {metrics.psnr(x, conv):6.2f} -> {metrics.psnr(x, dec[name]):6.2f} dB  "
-              f"bitrate {br['bitrate']:6.3f} b/val")
-        limit = eb if args.mode == "strict" else (
-            2 * eb if args.mode == "relaxed" else np.inf)
+              f"bitrate {br[name]['bitrate']:6.3f} b/val")
+        limit = eb if mode == "strict" else (
+            2 * eb if mode == "relaxed" else np.inf)
         assert err <= limit * (1 + 1e-9), "bound violated!"
     print("[ok] all error bounds verified")
 

@@ -1,11 +1,11 @@
 """NeurLZ quickstart: compress a scientific field with online neural
-enhancement, decompress, verify the bound.
+enhancement, decompress, verify the bound — via the first-class session API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro import core
+import repro
 from repro.core import metrics
 from repro.data import fields
 
@@ -13,15 +13,18 @@ from repro.data import fields
 flds = fields.make_fields("nyx", shape=(32, 48, 48), seed=0)
 x = flds["dark_matter_density"]
 
-# 2. compress with a strict 1e-3 value-range-relative bound; the enhancer
-#    trains online for 5 epochs during compression
-cfg = core.NeurLZConfig(compressor="szlike", mode="strict", epochs=5)
-archive = core.compress({"dmd": x}, rel_eb=1e-3, config=cfg)
+# 2. a compression session: strict 1e-3 value-range-relative bound, the
+#    enhancer trains online for 5 epochs during compression
+sess = repro.NeurLZ(mode="strict", epochs=5, compressor="szlike")
+archive = sess.compress({"dmd": x}, bounds=repro.ErrorBound(rel=1e-3))
 
-# 3. decompress and verify
-out = core.decompress(archive)["dmd"]
-eb = archive["fields"]["dmd"]["abs_eb"]
+# 3. round-trip through disk, then lazy random-access decode
+archive.save("/tmp/quickstart.nlz")
+with repro.Archive.open("/tmp/quickstart.nlz") as arc:
+    out = arc.decode("dmd")
+    eb = arc.entry("dmd")["abs_eb"]
+    br = arc.bitrate("dmd")["bitrate"]
+
 print(f"max |err|/eb : {np.abs(out.astype(np.float64) - x).max() / eb:.4f}  (must be <= 1)")
 print(f"PSNR         : {metrics.psnr(x, out):.2f} dB")
-print(f"bitrate      : {archive['bitrate']['dmd']['bitrate']:.3f} bits/value "
-      f"(fp32 raw = 32)")
+print(f"bitrate      : {br:.3f} bits/value (fp32 raw = 32)")

@@ -14,5 +14,34 @@ x64 for FP64 datasets; model/launch paths do not):
     checkpoint    fault-tolerant checkpointing
     data          synthetic fields + token pipeline
     launch        mesh, dryrun, roofline, train, serve
+
+Top-level API (lazy attributes, PEP 562 — importing ``repro`` alone stays
+cheap and does not flip the x64 switch; touching any of these loads
+``repro.core``):
+    NeurLZ                    compression session (configured object API)
+    Archive                   one handle over both archive container formats
+    ErrorBound                per-field error-bound spec (rel/abs/mode)
+    ModelConfig / EngineConfig / RegulationConfig
+                              the structured session configuration
+    NeurLZConfig              the flat legacy config (still accepted)
+    open(path)                Archive.open convenience
 """
 __version__ = "1.0.0"
+
+__all__ = ["NeurLZ", "Archive", "ErrorBound", "ModelConfig", "EngineConfig",
+           "RegulationConfig", "NeurLZConfig", "open"]
+
+_API = frozenset(__all__)   # every lazy attribute resolves via repro.api
+
+
+def __getattr__(name: str):
+    if name in _API:
+        from . import api
+        value = getattr(api, name)
+        globals()[name] = value        # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | _API)

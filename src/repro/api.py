@@ -1,0 +1,236 @@
+"""First-class NeurLZ session API.
+
+The paper frames NeurLZ as a *service* (§3.1): hand in snapshot fields with
+user-input error bounds, get strictly regulated reconstructions back.  This
+module is that surface:
+
+    import repro
+
+    sess = repro.NeurLZ(engine=repro.EngineConfig(engine="batched"),
+                        model=repro.ModelConfig(epochs=8))
+    arc = sess.compress(fields, bounds={
+        "temperature": repro.ErrorBound(rel=1e-3),
+        "pressure":    repro.ErrorBound(abs=2e-2, mode="relaxed"),
+    })
+    arc.save("snap.nlz")
+
+    with repro.Archive.open("snap.nlz") as arc:
+        t = arc.decode("temperature")        # lazy random access
+
+Configuration is split by concern — :class:`ModelConfig` (the enhancer and
+its online training), :class:`EngineConfig` (which engine runs it and how),
+:class:`RegulationConfig` (the default error-regulation mode) — while the
+flat :class:`repro.core.NeurLZConfig` keeps working everywhere: flat kwargs
+passed to :class:`NeurLZ` are forwarded into the right sub-config, and
+``NeurLZ(config=flat_cfg)`` adopts an existing one wholesale.  Internally
+the engines still consume the flat dataclass; :func:`join_config` /
+:func:`split_config` are the lossless bridge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from .core import bounds as bounds_lib
+from .core import neurlz
+from .core.archive_api import Archive
+from .core.bounds import ErrorBound
+from .core.neurlz import NeurLZConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """The skipping-DNN enhancer and its compression-time training."""
+
+    widths: tuple = (4, 4, 6, 6, 8)
+    skip: bool = True                   # skipping vs plain DNN (ablation)
+    learn_residual: bool = True         # residual vs direct learning
+    weight_dtype: str = "float32"       # archive precision for DNN weights
+    epochs: int = 100
+    batch: int = 10
+    lr: float = 1e-2
+    seed: int = 0
+    slice_axis: int = 0
+    cross_field: Mapping[str, tuple] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Which engine executes a compression run, and how."""
+
+    engine: str = "serial"              # serial | batched | streaming
+    compressor: str = "szlike"          # conventional stage (registry name)
+    conv_batch: bool = True             # snapshot-batched conventional stage
+    field_batching: str = "unroll"      # unroll (bit-exact) | vmap (stacked)
+    group_size: int = 2                 # fields per batched dispatch (0=all)
+    prefetch: bool = True               # overlap conv stage with training
+    field_shard: bool = True            # spread field groups over devices
+    max_resident_bytes: int = 0         # streaming residency budget (0=off)
+
+
+@dataclasses.dataclass(frozen=True)
+class RegulationConfig:
+    """Default error regulation; per-field :class:`ErrorBound` specs
+    override ``mode`` field by field."""
+
+    mode: str = "strict"                # strict | relaxed | unregulated
+
+
+_MODEL_FIELDS = tuple(f.name for f in dataclasses.fields(ModelConfig))
+_ENGINE_FIELDS = tuple(f.name for f in dataclasses.fields(EngineConfig))
+_REG_FIELDS = tuple(f.name for f in dataclasses.fields(RegulationConfig))
+
+
+def join_config(model: ModelConfig, engine: EngineConfig,
+                regulation: RegulationConfig) -> NeurLZConfig:
+    """Flatten the sub-configs into the engines' :class:`NeurLZConfig`."""
+    kw = {}
+    for f in _MODEL_FIELDS:
+        kw[f] = getattr(model, f)
+    for f in _ENGINE_FIELDS:
+        kw[f] = getattr(engine, f)
+    for f in _REG_FIELDS:
+        kw[f] = getattr(regulation, f)
+    return NeurLZConfig(**kw)
+
+
+def split_config(config: NeurLZConfig
+                 ) -> tuple[ModelConfig, EngineConfig, RegulationConfig]:
+    """Inverse of :func:`join_config` (lossless: the three sub-configs
+    partition every ``NeurLZConfig`` field)."""
+    return (
+        ModelConfig(**{f: getattr(config, f) for f in _MODEL_FIELDS}),
+        EngineConfig(**{f: getattr(config, f) for f in _ENGINE_FIELDS}),
+        RegulationConfig(**{f: getattr(config, f) for f in _REG_FIELDS}),
+    )
+
+
+class NeurLZ:
+    """A configured NeurLZ compression session.
+
+    Construct from sub-configs, a flat :class:`NeurLZConfig`, flat kwargs,
+    or any mix (kwargs win over the config object they land in):
+
+        NeurLZ()                                    # paper defaults
+        NeurLZ(engine=EngineConfig(engine="batched"))
+        NeurLZ(config=flat_neurlz_config)           # adopt a flat config
+        NeurLZ(epochs=8, mode="relaxed")            # flat kwargs, forwarded
+
+    The session is stateless between calls (compression is online per
+    snapshot); it exists to hold configuration and give ``compress`` /
+    ``decompress`` an object home.
+    """
+
+    def __init__(self, model: ModelConfig | None = None,
+                 engine: EngineConfig | None = None,
+                 regulation: RegulationConfig | None = None, *,
+                 config: NeurLZConfig | None = None, **flat_kwargs):
+        # `engine` is both a sub-config parameter and a flat NeurLZConfig
+        # field name; a string here is the flat field (engine="batched"),
+        # matching the kwarg-forwarding contract and `replace(engine=...)`.
+        if isinstance(engine, str):
+            flat_kwargs.setdefault("engine", engine)
+            engine = None
+        if config is not None:
+            m0, e0, r0 = split_config(config)
+        else:
+            m0, e0, r0 = ModelConfig(), EngineConfig(), RegulationConfig()
+        model = model if model is not None else m0
+        engine = engine if engine is not None else e0
+        regulation = regulation if regulation is not None else r0
+        # Flat NeurLZConfig kwargs: forwarded into the right sub-config.
+        mkw, ekw, rkw = {}, {}, {}
+        for k, v in flat_kwargs.items():
+            if k in _MODEL_FIELDS:
+                mkw[k] = v
+            elif k in _ENGINE_FIELDS:
+                ekw[k] = v
+            elif k in _REG_FIELDS:
+                rkw[k] = v
+            else:
+                raise TypeError(f"unknown NeurLZ config field {k!r}")
+        self.model = dataclasses.replace(model, **mkw)
+        self.engine = dataclasses.replace(engine, **ekw)
+        self.regulation = dataclasses.replace(regulation, **rkw)
+
+    @property
+    def config(self) -> NeurLZConfig:
+        """The flat config the engines consume."""
+        return join_config(self.model, self.engine, self.regulation)
+
+    def replace(self, **flat_kwargs) -> "NeurLZ":
+        """A new session with flat config fields replaced."""
+        return NeurLZ(config=self.config, **flat_kwargs)
+
+    # -- compression --------------------------------------------------------
+
+    def compress(self, fields: Mapping, bounds=None, *,
+                 rel_eb: float | None = None, abs_eb: float | None = None,
+                 collect_stats: bool = True) -> Archive:
+        """Compress one snapshot's fields; returns an :class:`Archive`.
+
+        ``bounds`` is the per-field error-bound surface: a single
+        :class:`ErrorBound` (or bare relative bound) for every field, or a
+        mapping ``name -> spec`` — fields missing from the mapping fall
+        back to ``rel_eb``/``abs_eb``.  Each field honors *its own* bound
+        and regulation mode.  With only ``rel_eb``/``abs_eb`` the call is
+        exactly the classic single-bound run (bit-identical archives).
+        """
+        arc = neurlz.compress_impl(fields, rel_eb, abs_eb=abs_eb,
+                                   config=self.config,
+                                   collect_stats=collect_stats,
+                                   bounds=bounds)
+        return Archive.from_dict(arc)
+
+    def compress_to(self, source, sink, bounds=None, *,
+                    rel_eb: float | None = None,
+                    abs_eb: float | None = None,
+                    collect_stats: bool = True) -> Archive:
+        """Stream-compress ``source`` into ``sink`` (out-of-core path).
+
+        ``source`` is anything :func:`repro.streaming.source.as_source`
+        accepts; ``sink`` a path or binary file object.  Runs the bounded-
+        memory streaming pipeline regardless of ``engine.engine`` and
+        returns a **lazy** :class:`Archive` over the written container,
+        with the pipeline report attached as ``archive.report``.
+        """
+        from .streaming import pipeline
+        cfg = self.config
+        if cfg.engine != "streaming":
+            cfg = dataclasses.replace(cfg, engine="streaming")
+        report = pipeline.compress(source, sink, rel_eb, abs_eb=abs_eb,
+                                   config=cfg, collect_stats=collect_stats,
+                                   bounds=bounds)
+        arc = Archive.open(sink)
+        arc.report = report
+        return arc
+
+    # -- decode -------------------------------------------------------------
+
+    def decompress(self, archive, *, reassemble: bool = False) -> dict:
+        """Full decode of an :class:`Archive` (or legacy archive dict) with
+        this session's engine (``batched`` fuses inference dispatches;
+        anything else decodes serially)."""
+        arc = Archive.from_dict(archive)
+        engine = "batched" if self.engine.engine == "batched" else "serial"
+        return arc.decode_all(engine=engine, reassemble=reassemble)
+
+    def __repr__(self) -> str:
+        return (f"NeurLZ(engine={self.engine.engine!r}, "
+                f"compressor={self.engine.compressor!r}, "
+                f"mode={self.regulation.mode!r}, "
+                f"epochs={self.model.epochs})")
+
+
+def open(path) -> Archive:  # noqa: A001 - deliberate, repro.open(path)
+    """Module-level convenience: :meth:`Archive.open`."""
+    return Archive.open(path)
+
+
+__all__ = ["NeurLZ", "Archive", "ErrorBound", "ModelConfig", "EngineConfig",
+           "RegulationConfig", "NeurLZConfig", "join_config", "split_config",
+           "open"]
+
+# Re-exported for API-surface completeness (resolve_bounds powers the
+# ``bounds=`` argument coercion rules documented above).
+resolve_bounds = bounds_lib.resolve_bounds

@@ -31,5 +31,12 @@ def decompress(arc: dict):
     return registry.decompress(arc)
 
 
+def decompress_many(arcs, *, batch: bool = True) -> dict:
+    """Decode ``{name: archive}``, fusing same-``decode_key`` archives
+    through the registry's stacked ``decompress_batched`` capability
+    (bit-identical to per-archive :func:`decompress`)."""
+    return registry.decompress_many(arcs, batch=batch)
+
+
 def archive_nbytes(arc: dict) -> int:
     return registry.archive_nbytes(arc)

@@ -52,6 +52,17 @@ class CompressorEntry:
     fields and must return per-field archives whose payloads are
     byte-identical to ``F`` independent ``compress`` calls — the capability
     that unlocks the fused conv-stage group dispatch.
+
+    ``decompress_batched(arcs) -> list[np.ndarray]`` (optional, the
+    symmetric decode capability) takes archives that agree on
+    ``decode_key`` and must return reconstructions **bit-identical** to one
+    ``decompress`` call per archive, produced by the same stacked eager-op
+    sequence discipline as the encode side (no jit — FMA contraction would
+    change float bits).  ``decode_key(arc)`` is the hashable an archive
+    must match on to share a stacked decode dispatch (shape/dtype plus any
+    layout fields like the predictor or interpolation level; the per-field
+    error bound rides along as a broadcast vector, exactly as it does on
+    the encode side).
     """
 
     name: str
@@ -60,6 +71,8 @@ class CompressorEntry:
     decompress: Callable
     archive_nbytes: Callable
     compress_batched: Callable | None = None
+    decompress_batched: Callable | None = None
+    decode_key: Callable | None = None       # (arc) -> hashable group key
     dtypes: tuple = ("float32", "float64")   # dtypes the batched path covers
     deterministic: bool = True               # encoder rec == decoder output
     description: str = ""
@@ -68,8 +81,17 @@ class CompressorEntry:
     def batchable(self) -> bool:
         return self.compress_batched is not None
 
+    @property
+    def decode_batchable(self) -> bool:
+        return (self.decompress_batched is not None
+                and self.decode_key is not None)
+
     def batch_supports(self, dtype) -> bool:
         return self.batchable and str(np.dtype(dtype)) in self.dtypes
+
+    def decode_batch_supports(self, arc: dict) -> bool:
+        return (self.decode_batchable
+                and str(np.dtype(arc.get("dtype", "float32"))) in self.dtypes)
 
 
 _COMPRESSORS: dict[str, CompressorEntry] = {}
@@ -89,10 +111,13 @@ def register(entry: CompressorEntry, *, overwrite: bool = False) -> CompressorEn
     owner = _KINDS.get(entry.kind)
     if owner is not None and owner.name != entry.name and (
             owner.decompress is not entry.decompress
-            or owner.archive_nbytes is not entry.archive_nbytes):
+            or owner.archive_nbytes is not entry.archive_nbytes
+            or owner.decompress_batched is not entry.decompress_batched
+            or owner.decode_key is not entry.decode_key):
         raise ValueError(
             f"archive kind {entry.kind!r} is owned by {owner.name!r} with "
-            "different decode entry points; kinds must decode unambiguously")
+            "different decode entry points (incl. decompress_batched/"
+            "decode_key); kinds must decode unambiguously")
     _COMPRESSORS[entry.name] = entry
     if owner is None or owner.name == entry.name:
         _KINDS[entry.kind] = entry
@@ -156,6 +181,38 @@ def archive_nbytes(arc: dict) -> int:
     return for_archive(arc).archive_nbytes(arc)
 
 
+def decompress_many(arcs, *, batch: bool = True) -> dict:
+    """Decode a set of conventional archives, batching where possible.
+
+    ``arcs`` maps name -> archive dict.  Archives whose entry declares
+    ``decompress_batched`` and that agree on the entry's ``decode_key``
+    run as one stacked eager dispatch; everything else decodes per-archive.
+    Outputs are bit-identical to per-archive :func:`decompress` either way
+    (the decode-side mirror of the conv stage's encode contract), so every
+    caller — batched-engine decode, streaming ``iter_decompress``, the
+    ``Archive`` handle's random access — may use this unconditionally.
+    """
+    out: dict = {}
+    groups: dict[tuple, list] = {}
+    for name, arc in arcs.items():
+        entry = for_archive(arc)
+        if batch and entry.decode_batch_supports(arc):
+            k = (entry.name, entry.decode_key(arc))
+        else:
+            k = (entry.name, ("__single__", name))
+        groups.setdefault(k, []).append((name, arc, entry))
+    for members in groups.values():
+        entry = members[0][2]
+        if len(members) > 1:    # only decode_key-matched archives group
+            recs = entry.decompress_batched([arc for _, arc, _ in members])
+            for (name, _, _), rec in zip(members, recs):
+                out[name] = rec
+        else:
+            for name, arc, e in members:
+                out[name] = e.decompress(arc)
+    return {name: out[name] for name in arcs}
+
+
 def _register_builtins() -> None:
     """Built-in compressors; imported lazily so this module stays cheap to
     import from documentation/tooling contexts."""
@@ -175,16 +232,22 @@ def _register_builtins() -> None:
         compress=szlike.compress, decompress=szlike.decompress,
         archive_nbytes=szlike.archive_nbytes,
         compress_batched=szlike.compress_batched,
+        decompress_batched=szlike.decompress_batched,
+        decode_key=szlike.decode_key,
         description="SZ3-style multilevel cubic-interpolation predictor"))
     register(CompressorEntry(
         name="szlike-lorenzo", kind="szlike",
         compress=_lorenzo_compress, decompress=szlike.decompress,
         archive_nbytes=szlike.archive_nbytes,
         compress_batched=_lorenzo_batched,
+        decompress_batched=szlike.decompress_batched,
+        decode_key=szlike.decode_key,
         description="cuSZ-style dual-quantization Lorenzo predictor"))
     register(CompressorEntry(
         name="zfplike", kind="zfplike",
         compress=zfplike.compress, decompress=zfplike.decompress,
         archive_nbytes=zfplike.archive_nbytes,
         compress_batched=zfplike.compress_batched,
+        decompress_batched=zfplike.decompress_batched,
+        decode_key=zfplike.decode_key,
         description="ZFP-style block-transform with exact correction pass"))

@@ -285,6 +285,129 @@ def _interp_encode_batched(xs: jnp.ndarray, ebs: np.ndarray, level: int,
     return np.asarray(rec), streams
 
 
+def _interp_decode_batched(pad_shape, ebs: np.ndarray, level: int, phases,
+                           means: np.ndarray, streams: list) -> np.ndarray:
+    """Stacked-``[F, ...]`` mirror of :func:`_interp_run`'s decode branch.
+
+    Same bit-stability discipline as :func:`_interp_encode_batched`: the
+    exact per-field eager op sequence with a leading field axis and the
+    per-field bounds/means broadcast as ``[F, 1, ...]`` — deliberately NOT
+    jitted.  ``streams`` is the per-field ``(codes, masks, lits)`` decoded
+    entropy streams; cursors advance in lockstep because every field shares
+    the phase schedule.  Returns the stacked padded reconstruction.
+    """
+    nf = len(streams)
+    bcast = (nf,) + (1,) * len(pad_shape)
+    eb = jnp.asarray(np.asarray(ebs, np.float64).reshape(bcast))
+    rec = jnp.broadcast_to(
+        jnp.asarray(np.asarray(means, np.float64).reshape(bcast)).astype(_INTERNAL),
+        (nf,) + tuple(pad_shape))
+
+    cursor = 0
+    lit_cursors = [0] * nf
+
+    def step(pred):
+        nonlocal cursor
+        n = int(np.prod(pred.shape[1:]))
+        c = jnp.asarray(np.stack(
+            [streams[f][0][cursor:cursor + n].reshape(pred.shape[1:])
+             for f in range(nf)]))
+        un = np.stack(
+            [streams[f][1][cursor:cursor + n].reshape(pred.shape[1:])
+             for f in range(nf)])
+        cursor += n
+        r = pred + c.astype(pred.dtype) * (2.0 * eb)
+        if un.any():
+            rn = np.array(r)        # writable copy, host-side scatter
+            for f in range(nf):
+                k = int(un[f].sum())
+                if k:
+                    lv = streams[f][2][lit_cursors[f]:lit_cursors[f] + k]
+                    lit_cursors[f] += k
+                    rn[f][un[f]] = lv
+            r = jnp.asarray(rn)
+        return r
+
+    s0 = 1 << level
+    init_slc = (slice(None),) + tuple(
+        slice(0, 1) if d == 1 else slice(0, None, s0) for d in pad_shape)
+    r0 = step(rec[init_slc])
+    rec = rec.at[init_slc].set(r0)
+
+    for s, axis in phases:
+        tgt, coarse = _phase_slicers(tuple(pad_shape), axis, s)
+        tgt = (slice(None),) + tgt
+        coarse = (slice(None),) + coarse
+        pred = _cubic_midpoint(rec[coarse], axis + 1)
+        if int(np.prod(pred.shape)) == 0:
+            continue
+        r = step(pred)
+        rec = rec.at[tgt].set(r)
+    return np.asarray(rec)
+
+
+def decode_key(arc: dict) -> tuple:
+    """Archives agreeing here may share one stacked decode dispatch (the
+    registry ``decode_key`` capability).  Per-field error bounds are *not*
+    part of the key — they broadcast along the stacked axis exactly as the
+    encode side does, so one fused encode group always decodes fused too."""
+    return (arc["predictor"], tuple(arc["shape"]), arc["dtype"],
+            arc.get("level"), tuple(arc.get("pad_shape", ())))
+
+
+def decompress_batched(arcs: list) -> list:
+    """Decode a ``decode_key``-matched group as ONE stacked eager pass.
+
+    Bit-identical to per-archive :func:`decompress` — the decode walk is
+    elementwise per point, so running it with a leading ``[F]`` axis (codes
+    stacked, per-field ``eb_int`` broadcast) reproduces every field's bits.
+    """
+    if not arcs:
+        return []
+    if any(a["kind"] != "szlike" for a in arcs):
+        raise ValueError("not szlike archives")
+    key = decode_key(arcs[0])
+    if any(decode_key(a) != key for a in arcs):
+        raise ValueError("decompress_batched needs decode_key-matched archives")
+    nf = len(arcs)
+    shape = tuple(arcs[0]["shape"])
+    ebs = np.asarray([a["eb_int"] for a in arcs], np.float64)
+    streams = [(entropy.decode_codes(a["codes"]).ravel(),
+                _decode_mask(a["unpred"]),
+                entropy.decode_floats(a["literals"]).ravel()) for a in arcs]
+
+    if arcs[0]["predictor"] == "interp":
+        pad_shape = tuple(arcs[0]["pad_shape"])
+        level = arcs[0]["level"]
+        _, phases = _interp_schedule(shape, level)
+        means = np.asarray([a["mean"] for a in arcs], np.float64)
+        rec = _interp_decode_batched(pad_shape, ebs, level, phases, means,
+                                     streams)
+        crop = tuple(slice(0, d) for d in shape)
+        outs = [rec[f][crop] for f in range(nf)]
+    else:
+        d = jnp.asarray(np.stack(
+            [streams[f][0].reshape(shape).astype(np.int32)
+             for f in range(nf)]))
+        q = lorenzo_undelta(d, axes=range(1, d.ndim))
+        bcast = (nf,) + (1,) * len(shape)
+        eb = jnp.asarray(ebs.reshape(bcast))
+        rec = q.astype(_INTERNAL) * (2.0 * eb)
+        out_all = np.array(rec)
+        outs = []
+        for f in range(nf):
+            o = out_all[f]
+            m = streams[f][1].reshape(shape)
+            o[m] = streams[f][2]
+            outs.append(o)
+    # Always materialize per-field copies: the slices above are views into
+    # the stacked [F, ...] array, and returning them would pin the whole
+    # group's memory until the last field is dropped — defeating the
+    # refcounted residency of the streaming decoder.  (astype with the
+    # default copy=True detaches; same bits either way.)
+    return [o.astype(np.dtype(a["dtype"])) for o, a in zip(outs, arcs)]
+
+
 # ---------------------------------------------------------------------------
 # Lorenzo (dual-quantization) predictor
 # ---------------------------------------------------------------------------

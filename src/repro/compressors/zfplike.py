@@ -305,6 +305,65 @@ def decompress(arc: dict) -> np.ndarray:
     return rec.astype(np.dtype(arc["dtype"]), copy=False)
 
 
+def decode_key(arc: dict) -> tuple:
+    """Registry ``decode_key``: archives agreeing here share one stacked
+    decode dispatch.  The per-field bound is excluded — corrections and
+    literal escapes are applied per field after the shared transform."""
+    return (tuple(arc["shape"]), arc["dtype"], tuple(arc["pad_shape"]),
+            tuple(arc["grid"]))
+
+
+def decompress_batched(arcs: list) -> list:
+    """Decode a ``decode_key``-matched group in one stacked pass.
+
+    Mirrors :func:`compress_batched`'s tail: all fields' blocks concatenate
+    on the block axis and run through ONE inverse lifting transform (exact
+    int32 arithmetic) plus one elementwise descale; the correction pass and
+    literal patches stay per field.  Bit-identical to per-archive
+    :func:`decompress`.
+    """
+    if not arcs:
+        return []
+    if any(a["kind"] != "zfplike" for a in arcs):
+        raise ValueError("not zfplike archives")
+    key = decode_key(arcs[0])
+    if any(decode_key(a) != key for a in arcs):
+        raise ValueError("decompress_batched needs decode_key-matched archives")
+    shape = tuple(arcs[0]["shape"])
+    grid = tuple(arcs[0]["grid"])
+    nb = int(np.prod(grid))
+    nd = len(shape)
+    bdims = (4,) * nd
+
+    emax = np.concatenate(
+        [entropy.decode_codes(a["emax"]).ravel() for a in arcs])
+    bshift = np.concatenate(
+        [entropy.decode_codes(a["bshift"]).ravel() for a in arcs])
+    coeff_q = np.concatenate(
+        [np.moveaxis(entropy.decode_codes(a["coeff"]).reshape(bdims + (nb,)),
+                     -1, 0) for a in arcs], axis=0)
+
+    n_all = coeff_q.shape[0]
+    bshape = (n_all,) + (1,) * nd
+    coeff_dq = coeff_q << bshift.reshape(bshape)
+    ints_rec = np.asarray(_transform(jnp.asarray(coeff_dq), inverse=True))
+    scale = np.exp2((_P - 2) - emax.astype(np.float64))
+    blocks_rec = ints_rec.astype(np.float64) / scale.reshape(bshape)
+
+    out = []
+    for f, arc in enumerate(arcs):
+        rec = _unblockify(blocks_rec[f * nb:(f + 1) * nb],
+                          tuple(arc["pad_shape"]), grid, shape)
+        need = _decode_mask(arc["corr_mask"]).reshape(shape)
+        corr = entropy.decode_codes(arc["corr_codes"]).ravel()
+        rec[need] = rec[need] + corr * (2.0 * arc["eb_int"])
+        nfm = _decode_mask(arc["lit_mask"]).reshape(shape)
+        if nfm.any():
+            rec[nfm] = entropy.decode_floats(arc["lit_vals"]).ravel()
+        out.append(rec.astype(np.dtype(arc["dtype"]), copy=False))
+    return out
+
+
 def archive_nbytes(arc: dict) -> int:
     n = 64
     for key in ("emax", "bshift", "coeff", "corr_mask", "corr_codes",

@@ -1,7 +1,11 @@
 """NeurLZ core — the paper's primary contribution as a composable JAX module.
 
 Public API:
+    Archive                             — handle over both archive formats
+    ErrorBound                          — per-field error-bound spec
     NeurLZConfig, compress, decompress  — the enhancer pipeline
+      (compress/decompress/load are legacy dict shims; prefer
+       ``repro.NeurLZ`` / ``repro.Archive``)
     skipping_dnn                        — the ~3k-param enhancer network
     online_trainer                      — compression-time learning loop
     regulation                          — 1×/2× error-bound modes
@@ -11,6 +15,8 @@ import jax
 
 jax.config.update("jax_enable_x64", True)  # FP64 datasets (Miranda)
 
-from . import archive, batched_engine, conv_stage, metrics, online_trainer, regulation, skipping_dnn  # noqa: E402,F401
+from . import archive, batched_engine, bounds, conv_stage, metrics, online_trainer, regulation, skipping_dnn  # noqa: E402,F401
 from .neurlz import (NeurLZConfig, assemble_streaming_archive, compress,  # noqa: E402,F401
                      decompress, field_bitrate, load, save)
+from .bounds import ErrorBound, resolve_bounds  # noqa: E402,F401
+from .archive_api import Archive  # noqa: E402,F401

@@ -146,6 +146,9 @@ class ArchiveReader:
 
     Decodes the index footer once, then ``read_entry(name)`` loads exactly
     one field's record from disk — the basis of one-field-at-a-time decode.
+    ``entry_reads`` records every entry record pulled off disk, in order
+    (the footer is not an entry) — the accounting that lets tests assert a
+    lazy decode touched only one field's aux closure.
     """
 
     def __init__(self, source):
@@ -162,6 +165,7 @@ class ArchiveReader:
         self.version = footer["version"]
         self.meta = footer["meta"]
         self.entries = footer["entries"]
+        self.entry_reads: list[str] = []
 
     def _read_record(self, offset: int):
         self._f.seek(offset)
@@ -173,6 +177,7 @@ class ArchiveReader:
         rec = self._read_record(off)
         if rec["name"] != name:
             raise ValueError(f"index points at {rec['name']!r}, not {name!r}")
+        self.entry_reads.append(name)
         return rec["entry"]
 
     def close(self) -> None:

@@ -1,0 +1,301 @@
+"""First-class ``Archive`` handle over both NeurLZ container formats.
+
+One object wraps either a **whole-dict** archive (the in-memory format the
+serial/batched engines produce and :func:`repro.core.archive.save` writes)
+or a **streaming** ``NLZSTRM1`` container (the incremental format the
+bounded-memory pipeline appends) and gives every consumer one surface:
+
+* ``Archive.open(path)`` sniffs the format.  Opening a streaming container
+  reads only the index footer — O(1) resident bytes no matter how large
+  the snapshot is; no entry record is touched until asked for.
+* ``arc.decode("temperature")`` is lazy random access: it reads exactly
+  that field's entry plus its cross-field **aux closure** (each aux
+  producer's entry, for its conventional reconstruction) and decodes only
+  that — the decoder-side counterpart of the streaming encoder's
+  refcounted residency.  Same-signature conventional archives in the
+  closure decode through the registry's stacked ``decompress_batched``
+  capability.
+* ``arc.decode_all(engine=...)`` mirrors the old full decode
+  (``engine="serial"`` streams one field at a time for streaming
+  containers; ``engine="batched"`` fuses enhancer inference and
+  conventional decode dispatches).
+* ``arc.bitrate()`` / ``arc.save(path)`` round out the session surface.
+
+The handle is also a read-only :class:`~collections.abc.Mapping` with the
+whole-dict archive's keys (``"fields"``, ``"bitrate"``, ...), so legacy
+code that indexes the dict keeps working unchanged — for a streaming
+container those values materialize (and are cached) on first access,
+keeping ``open`` itself cheap.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from collections.abc import Mapping
+
+import numpy as np
+
+from ..compressors import registry
+from . import archive as arc_io
+from . import neurlz
+
+_TOP_KEYS = ("kind", "fields", "slice_axis", "compressor", "timing",
+             "bitrate")
+
+
+class Archive(Mapping):
+    """Handle over one compressed snapshot, whichever container holds it."""
+
+    def __init__(self, arc: dict | None = None, *, reader=None,
+                 path: str | None = None):
+        if (arc is None) == (reader is None):
+            raise ValueError("construct via Archive.open / Archive.from_dict")
+        self._arc = arc                    # whole-dict backend
+        self._reader = reader              # streaming backend (ArchiveReader)
+        self._path = path
+        self._entries: dict[str, dict] = {}     # streaming: cached entries
+        self._bitrate: dict | None = None
+        self.report: dict | None = None    # compression report, if any
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def open(cls, source) -> "Archive":
+        """Open either container format (path or binary file object).
+
+        Streaming containers open lazily: only the index footer is read.
+        Whole-dict files load the dict (that format is one msgpack blob —
+        it has no random-access index to defer to).
+        """
+        if isinstance(source, (str, bytes, os.PathLike)):
+            if arc_io.is_streaming_archive(source):
+                return cls(reader=arc_io.ArchiveReader(source),
+                           path=os.fspath(source))
+            return cls(arc=arc_io.load(source), path=os.fspath(source))
+        source.seek(0)          # sniff from the start, wherever the caller
+        head = source.read(8)   # left the position (e.g. just-written EOF)
+        source.seek(0)
+        if arc_io.is_streaming_archive(head):
+            return cls(reader=arc_io.ArchiveReader(source))
+        return cls(arc=arc_io.loads(source.read()))
+
+    @classmethod
+    def from_dict(cls, arc: dict) -> "Archive":
+        """Wrap an in-memory whole-dict archive (no copy)."""
+        if isinstance(arc, Archive):
+            return arc
+        return cls(arc=arc)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def streaming(self) -> bool:
+        """True when backed by an ``NLZSTRM1`` container (lazy entries)."""
+        return self._reader is not None
+
+    @property
+    def path(self) -> str | None:
+        return self._path
+
+    @property
+    def reader(self):
+        """The underlying :class:`ArchiveReader` (streaming backend only);
+        exposes the ``entry_reads`` accounting tests assert against."""
+        return self._reader
+
+    @property
+    def meta(self) -> dict:
+        if self.streaming:
+            return self._reader.meta
+        return {k: self._arc[k] for k in ("slice_axis", "compressor")}
+
+    @property
+    def field_names(self) -> list[str]:
+        """Entry names, snapshot order (block entries under their own
+        ``name#bN`` names; see :attr:`block_manifest`)."""
+        if self.streaming:
+            return list(self._reader.meta["field_order"])
+        return list(self._arc["fields"])
+
+    @property
+    def block_manifest(self) -> dict:
+        """``BlockedSource`` reassembly manifest (empty when no field was
+        split): original name -> ``{"axis", "blocks": [(entry, lo, hi)]}``."""
+        if self.streaming:
+            return dict(self._reader.meta.get("blocks") or {})
+        return {}
+
+    def entry(self, name: str) -> dict:
+        """One field's raw archive entry (read from disk once, then cached —
+        resident entries stay bounded by what you actually touch;
+        accounting sweeps use :meth:`_entry_transient` so they don't pin
+        the whole container)."""
+        if not self.streaming:
+            return self._arc["fields"][name]
+        if name not in self._entries:
+            self._entries[name] = self._reader.read_entry(name)
+        return self._entries[name]
+
+    def _entry_transient(self, name: str) -> dict:
+        """Read an entry WITHOUT inserting it into the cache (reuses a
+        cached copy when present).  Used by whole-archive sweeps that only
+        need per-entry metadata, so e.g. ``bitrate()`` over a 100-GB
+        container does not leave every payload resident."""
+        if not self.streaming or name in self._entries:
+            return self.entry(name)
+        return self._reader.read_entry(name)
+
+    # -- decode -------------------------------------------------------------
+
+    def decode(self, name: str) -> np.ndarray:
+        """Lazy random-access decode of one field.
+
+        Touches only ``name``'s entry plus its cross-field aux closure (the
+        entries whose conventional reconstructions feed its enhancer
+        channels); for a streaming container nothing else is read from
+        disk, and the records are read *transiently* — a field-by-field
+        decode sweep stays O(one field + its aux set) resident instead of
+        pinning every touched entry (use :meth:`entry` when you want a
+        record cached).  ``name`` may also be a :attr:`block_manifest`
+        original, in which case its blocks are decoded and concatenated.
+        """
+        man = self.block_manifest.get(name)
+        if man is not None:
+            parts = [self.decode(bn) for bn, _, _ in man["blocks"]]
+            return np.concatenate(parts, axis=man["axis"])
+        e = self._entry_transient(name)
+        conv = {name: e["conv"]}
+        for a in e["aux"]:
+            if a not in conv:
+                conv[a] = self._entry_transient(a)["conv"]
+        recs = registry.decompress_many(conv)
+        slice_axis = self["slice_axis"]
+        return neurlz.decode_field_entry(e, recs[name],
+                                         [recs[a] for a in e["aux"]],
+                                         slice_axis)
+
+    def decode_all(self, *, engine: str = "serial",
+                   reassemble: bool = False) -> dict[str, np.ndarray]:
+        """Decode every field.
+
+        ``engine="serial"`` streams one field at a time for streaming
+        containers (decode memory stays bounded by a field plus its live
+        aux set); ``engine="batched"`` fuses enhancer inference per shape
+        signature and amortizes conventional decode through
+        ``decompress_batched``.  ``reassemble=True`` concatenates
+        ``BlockedSource`` blocks back into their original fields.
+        """
+        if self.streaming and engine == "serial":
+            from ..streaming import pipeline
+            source = self._path if self._path is not None else self._reader._f
+            return dict(pipeline.iter_decompress(source,
+                                                 reassemble=reassemble))
+        out = neurlz.decompress_impl(self, engine=engine)
+        if reassemble and self.block_manifest:
+            merged = dict(out)
+            for orig, man in self.block_manifest.items():
+                parts = [merged.pop(bn) for bn, _, _ in man["blocks"]]
+                merged[orig] = np.concatenate(parts, axis=man["axis"])
+            return merged
+        return out
+
+    # -- accounting / persistence ------------------------------------------
+
+    def _num_points(self, name: str) -> int:
+        if self.streaming:
+            return int(np.prod(self._reader.meta["shapes"][name]))
+        return int(np.prod(self._arc["fields"][name]["conv"]["shape"]))
+
+    def bitrate(self, name: str | None = None) -> dict:
+        """Paper bit-rate accounting; one field, or all (``name=None``).
+
+        On a streaming container each entry is read transiently (sizes
+        extracted, record dropped), so the sweep stays O(1) resident."""
+        have_table = self._arc is not None and "bitrate" in self._arc
+        if name is not None:
+            if have_table:
+                return self._arc["bitrate"][name]
+            view = {"fields": {name: self._entry_transient(name)}}
+            return neurlz.field_bitrate(view, name, self._num_points(name))
+        if self._bitrate is None:
+            if have_table:
+                self._bitrate = self._arc["bitrate"]
+            else:
+                self._bitrate = {n: self.bitrate(n)
+                                 for n in self.field_names}
+        return self._bitrate
+
+    def to_dict(self) -> dict:
+        """Materialize the whole-dict archive format (reads every entry of
+        a streaming container; byte-compatible with the in-memory engines'
+        output).  Delegates to :func:`neurlz.assemble_streaming_archive` —
+        the one implementation of the whole-dict assembly contract."""
+        if not self.streaming:
+            return self._arc
+        if self._arc is None:
+            self._arc = neurlz.assemble_streaming_archive(self._reader)
+        return self._arc
+
+    def save(self, path: str) -> int:
+        """Write the archive to ``path`` in its own container format;
+        returns bytes written.  A streaming container copies through
+        byte-for-byte (no entry is decoded)."""
+        if not self.streaming:
+            return arc_io.save(path, self._arc)
+        if self._path is not None:
+            shutil.copyfile(self._path, path)
+            return os.path.getsize(path)
+        f = self._reader._f
+        pos = f.tell()
+        f.seek(0)
+        with open(path, "wb") as out:
+            shutil.copyfileobj(f, out)
+        f.seek(pos)
+        return os.path.getsize(path)
+
+    def close(self) -> None:
+        if self._reader is not None:
+            self._reader.close()
+
+    def __del__(self):
+        # Deterministic fd release for `arc = Archive.open(p)` rebinding
+        # loops (legacy `core.load` callers never close); context-manager
+        # use is still the recommended form.
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def __enter__(self) -> "Archive":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- read-only Mapping over the whole-dict archive keys -----------------
+
+    def __getitem__(self, key):
+        if not self.streaming:
+            return self._arc[key]
+        if key == "kind":
+            return "neurlz"
+        if key in ("slice_axis", "compressor"):
+            return self._reader.meta[key]
+        if key == "timing":
+            return self._reader.meta.get("timing", {})
+        if key == "fields":
+            return self.to_dict()["fields"]
+        if key == "bitrate":
+            return self.bitrate()
+        raise KeyError(key)
+
+    def __iter__(self):
+        return iter(_TOP_KEYS if self.streaming else self._arc)
+
+    def __len__(self) -> int:
+        return len(_TOP_KEYS) if self.streaming else len(self._arc)
+
+    def __repr__(self) -> str:
+        kind = "streaming" if self.streaming else "dict"
+        where = f" path={self._path!r}" if self._path else ""
+        return (f"<Archive {kind}{where} fields={len(self.field_names)}>")

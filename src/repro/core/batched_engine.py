@@ -55,9 +55,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import compressors
+from ..compressors import registry
 from ..distributed import sharding as shardlib
 from ..optim import adamw_init, adamw_update, cosine_schedule
+from . import bounds as bounds_lib
 from . import conv_stage as conv_stage_lib
 from . import neurlz, online_trainer, skipping_dnn
 
@@ -71,6 +72,15 @@ class FieldGroup:
     names: list[str]                 # fields, input order
     slice_hw: tuple[int, int]        # per-slice spatial shape
     c_in: int                        # input channels (1 + aux fields)
+    mode: str | None = None          # per-field regulation mode override
+    #   (None -> the session config's mode; groups are mode-homogeneous so
+    #   one group shares one network signature / outlier-capture rule)
+
+
+def group_config(config, group: FieldGroup):
+    """Effective :class:`NeurLZConfig` for one group under its per-field
+    regulation-mode override (identity for legacy single-mode runs)."""
+    return neurlz.field_config(config, group.mode)
 
 
 def sliced_shape(shape: tuple, slice_axis: int) -> tuple:
@@ -82,31 +92,40 @@ def sliced_shape(shape: tuple, slice_axis: int) -> tuple:
 
 def plan_groups_from_meta(shapes: Mapping[str, tuple],
                           c_ins: Mapping[str, int],
-                          config) -> list[FieldGroup]:
+                          config,
+                          modes: Mapping[str, str] | None = None
+                          ) -> list[FieldGroup]:
     """Group-plan from field *metadata* only (shapes + channel counts).
 
     This is the plan export used by the streaming scheduler, which must
     plan a snapshot bigger than memory before loading any field data.
+    ``modes`` optionally carries per-field regulation modes (the
+    :class:`repro.core.bounds.ErrorBound` overrides): fields only share a
+    group when their modes agree, since a group shares one network
+    signature (regulated flag) and one outlier-capture rule.
     """
     groups: dict[tuple, FieldGroup] = {}
     for name, shape in shapes.items():
         sshape = sliced_shape(tuple(shape), config.slice_axis)
-        key = (sshape[1:], c_ins[name])
+        mode = modes.get(name) if modes is not None else None
+        key = (sshape[1:], c_ins[name], mode)
         if key not in groups:
             groups[key] = FieldGroup(names=[], slice_hw=tuple(sshape[1:]),
-                                     c_in=c_ins[name])
+                                     c_in=c_ins[name], mode=mode)
         groups[key].names.append(name)
     out = []
     for g in groups.values():
         size = config.group_size if config.group_size > 0 else len(g.names)
         for i in range(0, len(g.names), size):
             out.append(FieldGroup(names=g.names[i:i + size],
-                                  slice_hw=g.slice_hw, c_in=g.c_in))
+                                  slice_hw=g.slice_hw, c_in=g.c_in,
+                                  mode=g.mode))
     return out
 
 
-def plan_groups(fields: Mapping[str, np.ndarray], config) -> list[FieldGroup]:
-    """Group fields by slice geometry and channel count.
+def plan_groups(fields: Mapping[str, np.ndarray], config,
+                modes: Mapping[str, str] | None = None) -> list[FieldGroup]:
+    """Group fields by slice geometry, channel count and regulation mode.
 
     A group is the unit of batched dispatch: every field in it shares the
     jitted graph's spatial/channel signature.  Slice *counts* may differ
@@ -117,7 +136,7 @@ def plan_groups(fields: Mapping[str, np.ndarray], config) -> list[FieldGroup]:
     shapes = {name: np.asarray(x).shape for name, x in fields.items()}
     c_ins = {name: 1 + len(neurlz._aux_names(config, name, fields))
              for name in fields}
-    return plan_groups_from_meta(shapes, c_ins, config)
+    return plan_groups_from_meta(shapes, c_ins, config, modes=modes)
 
 
 # ---------------------------------------------------------------------------
@@ -239,6 +258,7 @@ def _prepare_group(group: FieldGroup, fields, recs, ebs, config, tcfg,
     ``device`` pins the whole group (unroll-mode field sharding: groups are
     round-robined over devices, and jit runs each group's program where its
     operands live — identical programs, so results stay bit-identical)."""
+    config = group_config(config, group)
     net_cfg = config.net_config(group.c_in)
     inputs, targets, stats = [], [], []
     steps, batches, totals = [], [], []
@@ -353,6 +373,7 @@ def group_results(state: _GroupState):
 def _finalize_group(state: _GroupState, fields, recs, ebs, conv_arcs, config,
                     collect_stats, out_fields, on_entry=None) -> None:
     """Blocking stage: fetch residuals, enhancement, entry packing."""
+    config = group_config(config, state.group)
     for f, name, hist, resid in group_results(state):
         x = np.asarray(fields[name])
         aux_names = neurlz._aux_names(config, name, fields)
@@ -379,25 +400,34 @@ def _conv_device():
 
 def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
              abs_eb: float | None = None, config=None,
-             collect_stats: bool = True, on_entry=None) -> dict:
+             collect_stats: bool = True, on_entry=None, bounds=None) -> dict:
     """Batched-engine compression; same archive contract as the serial path.
 
     ``on_entry(name, entry)`` fires as each field's archive entry completes
     (groups finalize as soon as the next group is dispatched, not at end of
     run), which lets callers archive incrementally and bounds how many
-    groups' tensors stay resident at once.
+    groups' tensors stay resident at once.  ``bounds`` carries per-field
+    :class:`repro.core.bounds.ErrorBound` specs; groups are planned
+    mode-homogeneous so each fused dispatch keeps one network signature.
     """
     config = config or neurlz.NeurLZConfig(engine="batched")
     t0 = time.time()
     tcfg = config.train_config()
-    groups = plan_groups(fields, config)
+    resolved = None
+    if bounds is not None:
+        resolved = bounds_lib.resolve_bounds(list(fields), bounds, rel_eb,
+                                             abs_eb,
+                                             default_mode=config.mode)
+    modes = ({n: b.mode for n, b in resolved.items()}
+             if resolved is not None else None)
+    groups = plan_groups(fields, config, modes=modes)
 
     conv_arcs, recs, ebs = {}, {}, {}
     conv_dev = _conv_device() if config.prefetch else None
     # Shared conventional stage: each call batches the handed fields by
-    # (shape, dtype) through the fused compressor entry.
+    # (shape, dtype, bound spec) through the fused compressor entry.
     stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
-                                     batch=config.conv_batch)
+                                     batch=config.conv_batch, bounds=resolved)
 
     def conv_compress(names):
         todo = {n: fields[n] for n in names if n not in conv_arcs}
@@ -455,15 +485,19 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
     return neurlz.assemble_archive(fields, out_fields, config, timing)
 
 
-def decompress(arc: dict) -> dict[str, np.ndarray]:
-    """Batched decode: all enhancer inference in one dispatch per signature.
+def decompress(arc) -> dict[str, np.ndarray]:
+    """Batched decode: all enhancer inference in one dispatch per signature,
+    and the conventional stage amortized through the registry's symmetric
+    ``decompress_batched`` capability (same-``decode_key`` archives decode
+    as one stacked eager dispatch).
 
     Output is bit-identical to ``neurlz.decompress(arc, engine="serial")``
-    because the per-field inference graph is the same.
+    because the per-field inference graph — and, contractually, the batched
+    conventional decode — are the same.
     """
     slice_axis = arc["slice_axis"]
-    recs = {name: compressors.decompress(e["conv"])
-            for name, e in arc["fields"].items()}
+    recs = registry.decompress_many(
+        {name: e["conv"] for name, e in arc["fields"].items()})
 
     # Group fields by inference signature so each dispatch is shape-static.
     sig_groups: dict[tuple, list[str]] = {}

@@ -1,0 +1,127 @@
+"""Per-field error-bound specs (NeurLZ §3.1: *user-input* error bounds).
+
+The paper frames NeurLZ as a service: each field of a snapshot arrives with
+its own user-chosen bound and leaves with a strictly regulated
+reconstruction.  :class:`ErrorBound` is that spec — a value-range-relative
+bound (``rel``), an absolute bound (``abs``), and an optional per-field
+regulation ``mode`` (strict 1× / relaxed 2× / unregulated) that overrides
+the session default.
+
+Everything downstream threads these specs instead of one scalar ``rel_eb``:
+the conventional stage groups fields by ``(shape, dtype, bound)`` so fields
+sharing a spec still batch through the fused compressor entries
+(:mod:`repro.core.conv_stage`), the engines derive each field's enhancer
+regulation from its own resolved mode, and every archive entry records the
+absolute bound it actually honored (``entry["abs_eb"]`` / ``entry["mode"]``
+— exactly as before, which is what keeps mixed-bound archives decodable by
+the unchanged per-entry decode path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+MODES = ("strict", "relaxed", "unregulated")
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorBound:
+    """One field's user-input error-bound spec.
+
+    ``rel``
+        value-range-relative bound: the absolute bound becomes
+        ``rel * (max - min)`` of the field (the paper's default notion).
+    ``abs``
+        absolute bound; takes precedence over ``rel`` when both are set
+        (matching the compressor entry points' ``abs_eb`` precedence).
+    ``mode``
+        per-field regulation mode (``"strict"`` / ``"relaxed"`` /
+        ``"unregulated"``) or ``None`` to inherit the session default.
+    """
+
+    rel: float | None = None
+    abs: float | None = None
+    mode: str | None = None
+
+    def __post_init__(self):
+        if self.mode is not None and self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r} (want one of {MODES})")
+        for k in ("rel", "abs"):
+            v = getattr(self, k)
+            if v is not None and not float(v) > 0.0:
+                raise ValueError(f"ErrorBound.{k} must be > 0, got {v!r}")
+
+    @property
+    def specified(self) -> bool:
+        return self.rel is not None or self.abs is not None
+
+    def resolved(self, default_mode: str) -> "ErrorBound":
+        """Concrete spec: mode filled in from the session default."""
+        if not self.specified:
+            raise ValueError("ErrorBound needs rel= or abs=")
+        if self.mode is not None:
+            return self
+        return dataclasses.replace(self, mode=default_mode)
+
+    def conv_key(self) -> tuple:
+        """Hashable grouping key for the conventional stage: fields whose
+        specs agree here may compress through one fused batched dispatch
+        (mode does not touch the conventional stage, so it is excluded)."""
+        return (self.rel, self.abs)
+
+    def limit(self, abs_eb: float) -> float:
+        """The verification ceiling this spec promises for a field whose
+        derived absolute bound is ``abs_eb`` (1× strict, 2× relaxed,
+        unbounded for the unregulated ablation)."""
+        if self.mode == "relaxed":
+            return 2.0 * abs_eb
+        if self.mode == "unregulated":
+            return float("inf")
+        return abs_eb
+
+
+def as_bound(spec) -> ErrorBound:
+    """Coerce a user spec: ErrorBound passes through, a bare number is a
+    value-range-relative bound (the historical ``rel_eb`` meaning)."""
+    if isinstance(spec, ErrorBound):
+        return spec
+    if isinstance(spec, (int, float)):
+        return ErrorBound(rel=float(spec))
+    raise TypeError(f"cannot interpret {type(spec).__name__} as an ErrorBound "
+                    "(want ErrorBound or a relative-bound number)")
+
+
+def resolve_bounds(names, bounds, rel_eb=None, abs_eb=None, *,
+                   default_mode: str = "strict"
+                   ) -> dict[str, ErrorBound]:
+    """Resolve per-field specs for every field of a snapshot.
+
+    ``bounds`` may be ``None`` (every field uses ``rel_eb``/``abs_eb``), one
+    spec applied to all fields, or a mapping ``name -> spec`` whose missing
+    names fall back to ``rel_eb``/``abs_eb``.  Specs may be
+    :class:`ErrorBound` instances or bare numbers (relative bounds).  Every
+    returned spec is concrete (mode filled in); a field with no resolvable
+    bound is a hard error.
+    """
+    default = ErrorBound(rel=rel_eb, abs=abs_eb) \
+        if (rel_eb is not None or abs_eb is not None) else None
+    out: dict[str, ErrorBound] = {}
+    if bounds is None:
+        per_field: Mapping = {}
+        fallback = default
+    elif isinstance(bounds, Mapping):
+        per_field = bounds
+        unknown = [n for n in bounds if n not in set(names)]
+        if unknown:
+            raise KeyError(f"bounds given for unknown fields {unknown}")
+        fallback = default
+    else:
+        per_field = {}
+        fallback = as_bound(bounds)
+    for name in names:
+        spec = as_bound(per_field[name]) if name in per_field else fallback
+        if spec is None or not spec.specified:
+            raise ValueError(f"no error bound for field {name!r}: pass "
+                             "rel_eb/abs_eb or a bounds entry for it")
+        out[name] = spec.resolved(default_mode)
+    return out

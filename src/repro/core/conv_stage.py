@@ -4,11 +4,15 @@ The three engines used to carry their own per-field loop around
 ``compressors.compress`` (serial: upfront over the snapshot; batched: lazily
 per training group; streaming: per field on the reader side).  This module is
 the one conventional stage they all call now: it plans the fields it is
-handed into groups of identical ``(shape, dtype)`` — the error-bound spec is
-shared per run, so a group is exactly the ISSUE's ``(shape, dtype, eb)``
-unit — and runs each group through the compressor's *batched* entry point
-when its registry entry declares the capability
+handed into groups of identical ``(shape, dtype, error-bound spec)`` and
+runs each group through the compressor's *batched* entry point when its
+registry entry declares the capability
 (:class:`repro.compressors.registry.CompressorEntry.compress_batched`).
+With the run's historical single scalar bound every field shares one spec
+and the plan degenerates to the original ``(shape, dtype)`` grouping; with
+per-field :class:`repro.core.bounds.ErrorBound` specs, fields that share a
+spec still batch and fields with distinct bounds split into their own
+groups (a fused dispatch hands ``compress_batched`` exactly one spec).
 
 The batched entries execute the group as ONE stacked op sequence (a single
 device-op stream for the whole group instead of one per field) and are
@@ -53,16 +57,20 @@ class ConvStats:
         return dataclasses.asdict(self)
 
 
-def plan_groups(metas: Mapping[str, tuple]) -> list[list[str]]:
-    """Group field names by ``(shape, dtype)``, preserving input order.
+def plan_groups(metas: Mapping[str, tuple],
+                keys: Mapping[str, tuple] | None = None) -> list[list[str]]:
+    """Group field names by ``(shape, dtype[, key])``, preserving input order.
 
     ``metas`` maps name -> ``(shape, dtype)``.  Fields of one group can run
-    through a batched compressor entry as a stacked array.
+    through a batched compressor entry as a stacked array.  ``keys``
+    optionally refines the plan with a per-field hashable (the error-bound
+    spec): fields only share a group when their keys agree too.
     """
     groups: dict[tuple, list[str]] = {}
     for name, (shape, dtype) in metas.items():
-        groups.setdefault((tuple(shape), str(np.dtype(dtype))),
-                          []).append(name)
+        k = (tuple(shape), str(np.dtype(dtype)),
+             keys[name] if keys is not None else None)
+        groups.setdefault(k, []).append(name)
     return list(groups.values())
 
 
@@ -76,15 +84,28 @@ class ConvStage:
     """
 
     def __init__(self, compressor: str, rel_eb: float | None = None,
-                 abs_eb: float | None = None, *, batch: bool = True):
+                 abs_eb: float | None = None, *, batch: bool = True,
+                 bounds: Mapping | None = None):
         self.entry = registry.get(compressor)   # unknown name -> ValueError
         self.rel_eb = rel_eb
         self.abs_eb = abs_eb
         self.batch = batch
+        # Per-field ErrorBound specs; fields absent here use the run scalars.
+        self.bounds = dict(bounds) if bounds else None
         self.stats = ConvStats()
 
+    def bound_for(self, name: str) -> tuple[float | None, float | None]:
+        """``(rel_eb, abs_eb)`` this run will hand the compressor for one
+        field (abs takes precedence inside the compressor entry points).
+        Doubles as the plan's grouping key — the spec's ``conv_key``."""
+        if self.bounds is not None and name in self.bounds:
+            return self.bounds[name].conv_key()
+        return (self.rel_eb, self.abs_eb)
+
     def plan(self, metas: Mapping[str, tuple]) -> list[list[str]]:
-        return plan_groups(metas)
+        keys = ({n: self.bound_for(n) for n in metas}
+                if self.bounds is not None else None)
+        return plan_groups(metas, keys=keys)
 
     def run(self, fields: Mapping[str, np.ndarray], *,
             batch: bool | None = None
@@ -106,17 +127,17 @@ class ConvStage:
         for group in self.plan(metas):
             self.stats.groups += 1
             dtype = metas[group[0]][1]
+            rel, ab = self.bound_for(group[0])   # one spec per group, by plan
             if (batch and len(group) > 1
                     and self.entry.batch_supports(dtype)):
                 results = self.entry.compress_batched(
-                    [arrs[n] for n in group], self.rel_eb, abs_eb=self.abs_eb)
+                    [arrs[n] for n in group], rel, abs_eb=ab)
                 self.stats.calls += 1
                 self.stats.batched_fields += len(group)
                 out.update(zip(group, results))
             else:
                 for n in group:
-                    out[n] = self.entry.compress(arrs[n], self.rel_eb,
-                                                 abs_eb=self.abs_eb)
+                    out[n] = self.entry.compress(arrs[n], rel, abs_eb=ab)
                     self.stats.calls += 1
                     self.stats.fallback_fields += 1
         self.stats.fields += len(arrs)

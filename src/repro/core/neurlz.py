@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Mapping
 
 import jax
@@ -43,6 +44,7 @@ import numpy as np
 from .. import compressors
 from ..compressors import outliers as outlier_codec
 from . import archive as arc_io
+from . import bounds as bounds_lib
 from . import conv_stage as conv_stage_lib
 from . import metrics, online_trainer, regulation, skipping_dnn
 
@@ -86,6 +88,28 @@ def _aux_names(cfg: NeurLZConfig, name: str, fields) -> list[str]:
     if missing:
         raise KeyError(f"cross-field aux {missing} not in input fields")
     return aux
+
+
+def field_config(config: NeurLZConfig, mode: str | None) -> NeurLZConfig:
+    """The effective config for one field under a per-field regulation mode
+    (``None`` or the session mode -> the session config unchanged, which is
+    what keeps legacy single-bound runs on the exact historical path)."""
+    if mode is None or mode == config.mode:
+        return config
+    return dataclasses.replace(config, mode=mode)
+
+
+_warned_shims: set[str] = set()
+
+
+def _warn_legacy(fn: str, repl: str) -> None:
+    """One ``DeprecationWarning`` per process per legacy dict-API shim."""
+    if fn in _warned_shims:
+        return
+    _warned_shims.add(fn)
+    warnings.warn(
+        f"repro.core.{fn}() is a legacy dict-API shim; prefer {repl} "
+        "(see the README migration table)", DeprecationWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -166,31 +190,55 @@ def assemble_archive(fields: Mapping[str, np.ndarray], out_fields: dict,
 
 def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
              abs_eb: float | None = None, config: NeurLZConfig = NeurLZConfig(),
-             collect_stats: bool = True) -> dict:
-    """Compress a dict of fields of one snapshot into a NeurLZ archive dict."""
+             collect_stats: bool = True, bounds=None) -> dict:
+    """Compress a dict of fields of one snapshot into a NeurLZ archive dict.
+
+    Legacy dict-API shim — :class:`repro.NeurLZ` / :class:`repro.Archive`
+    are the first-class surface.  ``bounds`` optionally carries per-field
+    :class:`repro.core.bounds.ErrorBound` specs (see
+    :func:`repro.core.bounds.resolve_bounds` for the accepted forms).
+    """
+    _warn_legacy("compress", "repro.NeurLZ(...).compress(...)")
+    return compress_impl(fields, rel_eb, abs_eb=abs_eb, config=config,
+                         collect_stats=collect_stats, bounds=bounds)
+
+
+def compress_impl(fields, rel_eb=None, *, abs_eb=None,
+                  config: NeurLZConfig = NeurLZConfig(),
+                  collect_stats: bool = True, bounds=None) -> dict:
+    """Engine dispatch shared by the dict shim and the session API."""
     if config.engine == "batched":
         from . import batched_engine
         return batched_engine.compress(fields, rel_eb, abs_eb=abs_eb,
                                        config=config,
-                                       collect_stats=collect_stats)
+                                       collect_stats=collect_stats,
+                                       bounds=bounds)
     if config.engine == "streaming":
         from ..streaming import pipeline
         return pipeline.compress_dict(fields, rel_eb, abs_eb=abs_eb,
                                       config=config,
-                                      collect_stats=collect_stats)
+                                      collect_stats=collect_stats,
+                                      bounds=bounds)
     if config.engine != "serial":
         raise ValueError(f"unknown engine {config.engine!r} "
                          "(want 'serial', 'batched' or 'streaming')")
     return _compress_serial(fields, rel_eb, abs_eb=abs_eb, config=config,
-                            collect_stats=collect_stats)
+                            collect_stats=collect_stats, bounds=bounds)
 
 
-def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats):
+def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats,
+                     bounds=None):
     t0 = time.time()
-    # Shared conventional stage: the whole snapshot is one plan, so
-    # same-(shape, dtype) fields compress through the fused batched entry.
+    # Per-field error-bound specs (None -> the legacy single-scalar path).
+    resolved = None
+    if bounds is not None:
+        resolved = bounds_lib.resolve_bounds(list(fields), bounds, rel_eb,
+                                             abs_eb,
+                                             default_mode=config.mode)
+    # Shared conventional stage: the whole snapshot is one plan, so fields
+    # sharing a (shape, dtype, bound spec) compress through the fused entry.
     stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
-                                     batch=config.conv_batch)
+                                     batch=config.conv_batch, bounds=resolved)
     conv = stage.run(fields)
     conv_arcs = {n: arc for n, (arc, _) in conv.items()}
     recs = {n: rec for n, (_, rec) in conv.items()}
@@ -209,12 +257,14 @@ def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats):
     for name, x in fields.items():
         x = np.asarray(x)
         eb = ebs[name]
-        aux_names = _aux_names(config, name, fields)
+        fcfg = field_config(config,
+                            resolved[name].mode if resolved else None)
+        aux_names = _aux_names(fcfg, name, fields)
         aux = [recs[a] for a in aux_names]
-        net_cfg = config.net_config(1 + len(aux))
-        tcfg = config.train_config()
+        net_cfg = fcfg.net_config(1 + len(aux))
+        tcfg = fcfg.train_config()
 
-        inputs, targets, stats = build_dataset(x, recs[name], eb, aux, config)
+        inputs, targets, stats = build_dataset(x, recs[name], eb, aux, fcfg)
 
         key = jax.random.PRNGKey(tcfg.seed)
         params = skipping_dnn.init_params(key, net_cfg)
@@ -224,9 +274,9 @@ def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats):
         train_time += time.time() - tt
 
         resid_norm = online_trainer.predict_residual(params, inputs, net_cfg)
-        entry = pack_entry(config, conv_arcs[name], params, stats, aux_names,
+        entry = pack_entry(fcfg, conv_arcs[name], params, stats, aux_names,
                            eb, net_cfg, history, collect_stats)
-        finalize_entry(entry, x, recs[name], resid_norm, eb, stats, config)
+        finalize_entry(entry, x, recs[name], resid_norm, eb, stats, fcfg)
         out_fields[name] = entry
         for m in (name, *aux_names):
             rec_refs[m] -= 1
@@ -273,13 +323,35 @@ def apply_decoded_entry(entry: dict, rec: np.ndarray, resid_norm: np.ndarray,
     return out
 
 
-def decompress(arc: dict, *, engine: str = "serial") -> dict[str, np.ndarray]:
+def decode_field_entry(e: dict, rec: np.ndarray, aux: list,
+                       slice_axis: int) -> np.ndarray:
+    """Full single-field decode from its archive entry + conventional
+    reconstructions (its own and its aux fields'): enhancer inference +
+    enhancement + outlier patching.  The one decode body shared by the
+    serial path, streaming ``iter_decompress`` and ``Archive.decode``."""
+    net_cfg, params = decode_entry_net(e)
+    stats = [tuple(s) for s in e["stats"]]
+    inputs, _, _ = online_trainer.make_dataset(
+        rec, None, e["abs_eb"], aux=aux, slice_axis=slice_axis, stats=stats)
+    resid_norm = online_trainer.predict_residual(params, inputs, net_cfg)
+    return apply_decoded_entry(e, rec, resid_norm, slice_axis)
+
+
+def decompress(arc, *, engine: str = "serial") -> dict[str, np.ndarray]:
     """Full decode: conventional + enhancer inference + outlier patching.
 
-    ``engine="batched"`` runs every field's enhancer inference in a single
-    dispatch (bit-identical output — the batched path inlines the exact
-    serial inference graph per field).
+    Legacy dict-API shim over :func:`decompress_impl` (prefer
+    ``Archive.decode`` / ``Archive.decode_all``).  ``engine="batched"``
+    runs every field's enhancer inference in a single dispatch
+    (bit-identical output — the batched path inlines the exact serial
+    inference graph per field).  Accepts archive dicts and
+    :class:`repro.core.archive_api.Archive` handles alike.
     """
+    _warn_legacy("decompress", "Archive.decode_all(...) / Archive.decode(...)")
+    return decompress_impl(arc, engine=engine)
+
+
+def decompress_impl(arc, *, engine: str = "serial") -> dict[str, np.ndarray]:
     if engine == "batched":
         from . import batched_engine
         return batched_engine.decompress(arc)
@@ -288,14 +360,8 @@ def decompress(arc: dict, *, engine: str = "serial") -> dict[str, np.ndarray]:
             for name, e in arc["fields"].items()}
     out = {}
     for name, e in arc["fields"].items():
-        net_cfg, params = decode_entry_net(e)
         aux = [recs[a] for a in e["aux"]]
-        stats = [tuple(s) for s in e["stats"]]
-        inputs, _, _ = online_trainer.make_dataset(
-            recs[name], None, e["abs_eb"], aux=aux, slice_axis=slice_axis,
-            stats=stats)
-        resid_norm = online_trainer.predict_residual(params, inputs, net_cfg)
-        out[name] = apply_decoded_entry(e, recs[name], resid_norm, slice_axis)
+        out[name] = decode_field_entry(e, recs[name], aux, slice_axis)
     return out
 
 
@@ -322,6 +388,15 @@ def field_bitrate(arc: dict, name: str, num_points: int) -> dict:
 
 
 def save(path: str, arc: dict) -> int:
+    """Write a whole-dict archive file.  Legacy dict-API shim: an
+    :class:`Archive` handle is materialized first, preserving the historical
+    ``save(load(streaming_path))`` round-trip, which converted a streaming
+    container into the whole-dict format.  (``Archive.save`` instead keeps
+    the native container and copies bytes.)"""
+    _warn_legacy("save", "Archive.save(path)")
+    from . import archive_api
+    if isinstance(arc, archive_api.Archive):
+        arc = arc.to_dict()
     return arc_io.save(path, arc)
 
 
@@ -347,8 +422,22 @@ def assemble_streaming_archive(reader: arc_io.ArchiveReader) -> dict:
     return arc
 
 
-def load(path: str) -> dict:
+def load(path: str):
+    """Open an archive file (either container format).
+
+    Legacy dict-API shim.  A whole-dict file loads into the plain archive
+    dict exactly as before.  A streaming (``NLZSTRM1``) container now comes
+    back as a **lazy** :class:`repro.core.archive_api.Archive` handle —
+    dict-compatible for reads (``arc["fields"]`` etc. materialize on first
+    access) but O(1) in resident bytes at open time, fixing the regression
+    where opening an out-of-core archive reassembled every field in
+    memory.  Two contract deltas for that case: the handle is a *read-only*
+    mapping (mutate ``arc.to_dict()`` instead), and it holds the container
+    file open — call ``arc.close()`` (or use it as a context manager) when
+    done; dropping the last reference also closes it.
+    """
+    _warn_legacy("load", "repro.Archive.open(path)")
     if arc_io.is_streaming_archive(path):
-        with arc_io.ArchiveReader(path) as r:
-            return assemble_streaming_archive(r)
+        from . import archive_api
+        return archive_api.Archive.open(path)
     return arc_io.load(path)

@@ -43,9 +43,10 @@ from typing import Mapping
 
 import numpy as np
 
-from .. import compressors
+from ..compressors import registry
 from ..core import archive as arc_io
-from ..core import batched_engine, neurlz, online_trainer
+from ..core import batched_engine, neurlz
+from ..core import bounds as bounds_lib
 from ..core import conv_stage as conv_stage_lib
 from . import source as source_lib
 from .writer import AsyncArchiveWriter, EntryTask
@@ -159,13 +160,16 @@ def _dataset_nbytes(meta: source_lib.FieldMeta, c_in: int,
 def compress(source, sink, rel_eb: float | None = None, *,
              abs_eb: float | None = None, config=None,
              collect_stats: bool = True,
-             stream: StreamConfig | None = None) -> dict:
+             stream: StreamConfig | None = None, bounds=None) -> dict:
     """Stream-compress a snapshot into an incremental archive container.
 
     ``source`` is anything :func:`repro.streaming.source.as_source`
     accepts (dict of arrays, ``.npy`` directory, or a
     :class:`ChunkedFieldSource`); ``sink`` is a path or binary file
-    object.  Returns a report dict (timing, peak residency, writer stats).
+    object.  ``bounds`` carries per-field
+    :class:`repro.core.bounds.ErrorBound` specs (groups are planned
+    mode-homogeneous, and the conventional stage batches per bound spec).
+    Returns a report dict (timing, peak residency, writer stats).
     Entries are bit-identical to ``engine="serial"`` archives.
     """
     config = config or neurlz.NeurLZConfig(engine="streaming")
@@ -178,6 +182,12 @@ def compress(source, sink, rel_eb: float | None = None, *,
     src = source_lib.as_source(source)
     names = src.names()
     metas = {n: src.meta(n) for n in names}
+    resolved = None
+    if bounds is not None:
+        resolved = bounds_lib.resolve_bounds(names, bounds, rel_eb, abs_eb,
+                                             default_mode=config.mode)
+    modes = ({n: b.mode for n, b in resolved.items()}
+             if resolved is not None else None)
     aux_map = {n: list(config.cross_field.get(n, ())) for n in names}
     for n, aux in aux_map.items():
         missing = [a for a in aux if a not in metas]
@@ -185,7 +195,7 @@ def compress(source, sink, rel_eb: float | None = None, *,
             raise KeyError(f"cross-field aux {missing} not in input fields")
     c_ins = {n: 1 + len(aux_map[n]) for n in names}
     groups = batched_engine.plan_groups_from_meta(
-        {n: metas[n].shape for n in names}, c_ins, config)
+        {n: metas[n].shape for n in names}, c_ins, config, modes=modes)
     order = order_groups(groups, aux_map, metas)
 
     rec_refs = {n: 1 for n in names}
@@ -208,7 +218,7 @@ def compress(source, sink, rel_eb: float | None = None, *,
     # compress as one batched plan under the existing residency ledger (the
     # loaded originals and their reconstructions are already charged).
     stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
-                                     batch=config.conv_batch)
+                                     batch=config.conv_batch, bounds=resolved)
 
     def group_cost(group) -> dict[str, int]:
         cost = {}
@@ -254,16 +264,17 @@ def compress(source, sink, rel_eb: float | None = None, *,
 
     def retire(state) -> None:
         """Sync the oldest group, hand entries to the writer, evict."""
+        gcfg = batched_engine.group_config(config, state.group)
         for f, name, hist, resid in batched_engine.group_results(state):
             x = np.asarray(xs[name])
             _, mask = neurlz.enhance_and_mask(x, recs[name], resid,
                                               ebs[name], state.stats[f],
-                                              config)
+                                              gcfg)
             writer.put(EntryTask(
                 name=name, conv_arc=conv_arcs.pop(name),
                 params=state.params[f], stats=state.stats[f],
                 aux=aux_map[name], eb=ebs[name], net_cfg=state.net_cfg,
-                history=hist, mask=mask))
+                history=hist, mask=mask, mode=state.group.mode))
             xs.pop(name, None)
             ledger.drop(f"x:{name}")
             ledger.drop(f"ds:{name}")
@@ -387,21 +398,22 @@ class PipelineScheduler:
         self.stream = stream or StreamConfig()
 
     def run(self, source, sink, rel_eb: float | None = None, *,
-            abs_eb: float | None = None, collect_stats: bool = True) -> dict:
+            abs_eb: float | None = None, collect_stats: bool = True,
+            bounds=None) -> dict:
         return compress(source, sink, rel_eb, abs_eb=abs_eb,
                         config=self.config, collect_stats=collect_stats,
-                        stream=self.stream)
+                        stream=self.stream, bounds=bounds)
 
 
 def compress_dict(fields, rel_eb: float | None = None, *,
                   abs_eb: float | None = None, config=None,
-                  collect_stats: bool = True) -> dict:
+                  collect_stats: bool = True, bounds=None) -> dict:
     """``engine="streaming"`` entry point for :func:`repro.core.compress`:
     run the full pipeline (scheduler, budget, writer thread) against an
     in-memory sink, then reassemble the whole-dict archive contract."""
     buf = io.BytesIO()
     report = compress(fields, buf, rel_eb, abs_eb=abs_eb, config=config,
-                      collect_stats=collect_stats)
+                      collect_stats=collect_stats, bounds=bounds)
     buf.seek(0)
     with arc_io.ArchiveReader(buf) as r:
         arc = neurlz.assemble_streaming_archive(r)
@@ -422,9 +434,13 @@ def iter_decompress(source, *, reassemble: bool = True):
 
     Only the reconstructions still needed as cross-field aux stay resident
     (same refcounting as the encoder), so decode memory is bounded by the
-    largest field plus its live aux set.  With ``reassemble=True`` (the
-    default), blocks written through :class:`BlockedSource` are concatenated
-    back into their original fields before being yielded.
+    largest field plus its live aux set.  Conventional decodes that become
+    due together (a field plus its not-yet-resident aux producers) run
+    through the registry's batched ``decompress_batched`` capability when
+    their archives share a decode signature — bit-identical to per-field
+    decode, fewer dispatches.  With ``reassemble=True`` (the default),
+    blocks written through :class:`BlockedSource` are concatenated back
+    into their original fields before being yielded.
     """
     with arc_io.ArchiveReader(source) as r:
         meta = r.meta
@@ -441,12 +457,6 @@ def iter_decompress(source, *, reassemble: bool = True):
                 refs[a] += 1
         recs: dict[str, np.ndarray] = {}
 
-        def rec_of(name: str) -> np.ndarray:
-            if name not in recs:
-                recs[name] = compressors.decompress(
-                    r.read_entry(name)["conv"])
-            return recs[name]
-
         def unref(name: str) -> None:
             refs[name] -= 1
             if refs[name] <= 0:
@@ -455,17 +465,19 @@ def iter_decompress(source, *, reassemble: bool = True):
         pending: dict[str, dict[str, np.ndarray]] = {}
         for name in order:
             e = r.read_entry(name)
-            if name not in recs:        # reuse this read; rec_of would
-                recs[name] = compressors.decompress(e["conv"])  # re-read it
+            # One batched conventional decode for everything this step
+            # newly needs: the field itself plus any aux producers whose
+            # reconstructions are not resident yet.
+            due = {}
+            if name not in recs:
+                due[name] = e["conv"]
+            for a in e["aux"]:
+                if a not in recs and a not in due:
+                    due[a] = r.read_entry(a)["conv"]
+            recs.update(registry.decompress_many(due))
             rec = recs[name]
-            aux = [rec_of(a) for a in e["aux"]]
-            net_cfg, params = neurlz.decode_entry_net(e)
-            stats = [tuple(s) for s in e["stats"]]
-            inputs, _, _ = online_trainer.make_dataset(
-                rec, None, e["abs_eb"], aux=aux, slice_axis=slice_axis,
-                stats=stats)
-            resid = online_trainer.predict_residual(params, inputs, net_cfg)
-            out = neurlz.apply_decoded_entry(e, rec, resid, slice_axis)
+            aux = [recs[a] for a in e["aux"]]
+            out = neurlz.decode_field_entry(e, rec, aux, slice_axis)
             unref(name)
             for a in e["aux"]:
                 unref(a)

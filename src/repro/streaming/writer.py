@@ -41,6 +41,9 @@ class EntryTask:
     net_cfg: object
     history: list
     mask: np.ndarray | None     # strict-mode outlier mask (encoded here)
+    mode: str | None = None     # per-field regulation-mode override
+    #   (None -> the writer config's mode; set by mixed-bound runs so the
+    #   packed entry records the mode the field actually honored)
 
 
 class AsyncArchiveWriter:
@@ -78,8 +81,9 @@ class AsyncArchiveWriter:
                 if self._error is not None:
                     continue        # drain after failure
                 t0 = time.time()
+                cfg = neurlz.field_config(self._config, task.mode)
                 entry = neurlz.pack_entry(
-                    self._config, task.conv_arc, task.params, task.stats,
+                    cfg, task.conv_arc, task.params, task.stats,
                     task.aux, task.eb, task.net_cfg, task.history,
                     self._collect_stats)
                 if task.mask is not None:

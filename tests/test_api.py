@@ -1,0 +1,267 @@
+"""First-class session API: NeurLZ sessions, structured configs, per-field
+ErrorBound specs.
+
+Covers the compat matrix (legacy dict calls and the session API produce
+bit-identical archives across all three engines), mixed per-field bounds
+(every field honors *its own* bound and mode — cross-engine bit-identical),
+config split/join, and the bounds-resolution rules.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro
+from repro import core
+from repro.api import EngineConfig, join_config, split_config
+from repro.core import archive as A
+from repro.core.bounds import ErrorBound, resolve_bounds
+from repro.data import fields as F
+
+FIELDS = F.make_fields("nyx", shape=(8, 16, 16), seed=7)
+NAMES = list(FIELDS)
+ENGINES = ("serial", "batched", "streaming")
+
+
+# ---------------------------------------------------------------------------
+# Structured config <-> flat config
+# ---------------------------------------------------------------------------
+
+def test_config_split_join_roundtrip():
+    flat = core.NeurLZConfig(compressor="zfplike", mode="relaxed", epochs=3,
+                             engine="batched", group_size=1,
+                             cross_field={"a": ("b",)}, widths=(4, 4))
+    m, e, r = split_config(flat)
+    assert join_config(m, e, r) == flat
+    # the three sub-configs partition every flat field
+    names = {f.name for f in dataclasses.fields(core.NeurLZConfig)}
+    covered = {f.name for cfg in (m, e, r)
+               for f in dataclasses.fields(cfg)}
+    assert covered == names
+
+
+def test_session_flat_kwargs_forwarded():
+    sess = repro.NeurLZ(epochs=7, compressor="zfplike", mode="relaxed",
+                        max_resident_bytes=123)
+    assert sess.model.epochs == 7
+    assert sess.engine.compressor == "zfplike"
+    assert sess.engine.max_resident_bytes == 123
+    assert sess.regulation.mode == "relaxed"
+    assert sess.config == core.NeurLZConfig(
+        epochs=7, compressor="zfplike", mode="relaxed",
+        max_resident_bytes=123)
+    with pytest.raises(TypeError, match="unknown NeurLZ config field"):
+        repro.NeurLZ(not_a_field=1)
+
+
+def test_engine_kwarg_accepts_flat_string():
+    """Regression: ``engine`` names both the sub-config parameter and the
+    flat NeurLZConfig field; a string must mean the flat field."""
+    assert repro.NeurLZ(engine="batched").engine.engine == "batched"
+    assert repro.NeurLZ().replace(engine="streaming").engine.engine \
+        == "streaming"
+    assert repro.NeurLZ(engine=EngineConfig(engine="serial")).engine.engine \
+        == "serial"
+
+
+def test_session_adopts_flat_config_and_replace():
+    flat = core.NeurLZConfig(epochs=4, engine="batched")
+    sess = repro.NeurLZ(config=flat)
+    assert sess.config == flat
+    sess2 = sess.replace(epochs=9)
+    assert sess2.config == dataclasses.replace(flat, epochs=9)
+    # explicit sub-config wins over the adopted flat config
+    sess3 = repro.NeurLZ(config=flat, engine=EngineConfig(engine="serial"))
+    assert sess3.engine.engine == "serial"
+    assert sess3.model.epochs == 4
+
+
+# ---------------------------------------------------------------------------
+# ErrorBound resolution rules
+# ---------------------------------------------------------------------------
+
+def test_error_bound_validation():
+    with pytest.raises(ValueError, match="unknown mode"):
+        ErrorBound(rel=1e-3, mode="nope")
+    with pytest.raises(ValueError, match="must be > 0"):
+        ErrorBound(rel=-1.0)
+    with pytest.raises(ValueError, match="rel= or abs="):
+        ErrorBound().resolved("strict")
+    assert ErrorBound(rel=1e-3).resolved("relaxed").mode == "relaxed"
+    assert ErrorBound(rel=1e-3, mode="strict").resolved("relaxed").mode \
+        == "strict"
+    assert ErrorBound(abs=1.0, mode="relaxed").limit(1.0) == 2.0
+    assert ErrorBound(abs=1.0, mode="unregulated").limit(1.0) == float("inf")
+
+
+def test_resolve_bounds_rules():
+    names = ["a", "b", "c"]
+    r = resolve_bounds(names, None, 1e-3, None, default_mode="strict")
+    assert all(r[n] == ErrorBound(rel=1e-3, mode="strict") for n in names)
+    # bare numbers are relative bounds; missing names fall back
+    r = resolve_bounds(names, {"a": 1e-2, "b": ErrorBound(abs=0.5)},
+                       1e-3, None, default_mode="relaxed")
+    assert r["a"] == ErrorBound(rel=1e-2, mode="relaxed")
+    assert r["b"] == ErrorBound(abs=0.5, mode="relaxed")
+    assert r["c"] == ErrorBound(rel=1e-3, mode="relaxed")
+    with pytest.raises(KeyError, match="unknown fields"):
+        resolve_bounds(names, {"zzz": 1e-3}, 1e-3, None)
+    with pytest.raises(ValueError, match="no error bound"):
+        resolve_bounds(names, {"a": 1e-3}, None, None)
+    with pytest.raises(TypeError):
+        resolve_bounds(names, object())
+
+
+# ---------------------------------------------------------------------------
+# API-compat matrix: legacy dict calls == session API, all engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_session_bit_identical_to_legacy_dict_api(engine):
+    cfg = core.NeurLZConfig(epochs=2, mode="strict", engine=engine)
+    with pytest.warns(DeprecationWarning) if _fresh_warn() else _nullctx():
+        arc_old = core.compress(FIELDS, rel_eb=1e-3, config=cfg)
+    sess = repro.NeurLZ(config=cfg)
+    arc_new = sess.compress(FIELDS, rel_eb=1e-3)
+    assert isinstance(arc_new, repro.Archive)
+    assert A.dumps(arc_new["fields"]) == A.dumps(arc_old["fields"])
+    assert arc_new["bitrate"] == arc_old["bitrate"]
+    # decode parity: session decompress == legacy decompress
+    dec_old = core.decompress(arc_old)
+    dec_new = sess.decompress(arc_new)
+    for n in FIELDS:
+        assert np.array_equal(dec_old[n], dec_new[n])
+
+
+def _fresh_warn():
+    from repro.core import neurlz as _n
+    return "compress" not in _n._warned_shims
+
+
+class _nullctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Mixed per-field bounds
+# ---------------------------------------------------------------------------
+
+def _mixed_bounds():
+    return {
+        NAMES[0]: ErrorBound(rel=1e-3),                     # strict default
+        NAMES[1]: ErrorBound(abs=2e-2, mode="relaxed"),
+        NAMES[2]: ErrorBound(rel=1e-2, mode="unregulated"),
+    }
+
+
+def test_mixed_bounds_each_field_honors_its_own():
+    bounds = _mixed_bounds()
+    sess = repro.NeurLZ(epochs=2)
+    arc = sess.compress(FIELDS, bounds=bounds, rel_eb=3e-3)
+    dec = sess.decompress(arc)
+    resolved = resolve_bounds(NAMES, bounds, 3e-3, None,
+                              default_mode="strict")
+    for n in NAMES:
+        e = arc["fields"][n]
+        assert e["mode"] == resolved[n].mode
+        if resolved[n].abs is not None:
+            assert e["abs_eb"] == pytest.approx(resolved[n].abs)
+        err = float(np.abs(dec[n].astype(np.float64)
+                           - FIELDS[n].astype(np.float64)).max())
+        assert err <= resolved[n].limit(e["abs_eb"]) * (1 + 1e-9), n
+    # the fallback field (not in the mapping) used rel_eb=3e-3, strict
+    fb = NAMES[3]
+    assert arc["fields"][fb]["mode"] == "strict"
+    err = float(np.abs(dec[fb].astype(np.float64)
+                       - FIELDS[fb].astype(np.float64)).max())
+    assert err <= arc["fields"][fb]["abs_eb"] * (1 + 1e-9)
+
+
+@pytest.mark.parametrize("engine", ("batched", "streaming"))
+def test_mixed_bounds_cross_engine_bit_identical(engine):
+    """Per-field bounds must not break the engines' bit-identity contract:
+    mode-homogeneous groups + per-spec conv groups reproduce serial bits."""
+    bounds = _mixed_bounds()
+    ref = repro.NeurLZ(epochs=2).compress(FIELDS, bounds=bounds, rel_eb=3e-3)
+    arc = repro.NeurLZ(epochs=2, engine=EngineConfig(engine=engine)) \
+        .compress(FIELDS, bounds=bounds, rel_eb=3e-3)
+    assert A.dumps(arc["fields"]) == A.dumps(ref["fields"])
+
+
+def test_single_bound_spec_applies_to_all_fields():
+    sess = repro.NeurLZ(epochs=1)
+    arc = sess.compress(FIELDS, bounds=ErrorBound(rel=1e-3, mode="relaxed"))
+    for n in NAMES:
+        assert arc["fields"][n]["mode"] == "relaxed"
+    # ...and is bit-identical to the same run via mode=relaxed + rel_eb
+    ref = repro.NeurLZ(epochs=1, mode="relaxed").compress(FIELDS,
+                                                          rel_eb=1e-3)
+    assert A.dumps(arc["fields"]) == A.dumps(ref["fields"])
+
+
+def test_conv_stage_groups_by_bound_spec():
+    """Fields sharing a bound spec still batch through the fused entry;
+    distinct specs split groups (the (shape, dtype, eb) planning unit)."""
+    from repro.core import conv_stage
+    flds = {f"f{i}": np.cumsum(np.ones((6, 8, 8), np.float32), axis=0) * i
+            for i in range(4)}
+    same = resolve_bounds(list(flds), ErrorBound(rel=1e-3), None, None)
+    st = conv_stage.ConvStage("szlike", bounds=same)
+    st.run(flds)
+    assert st.stats.calls == 1 and st.stats.batched_fields == 4
+    mixed = resolve_bounds(list(flds),
+                           {"f0": 1e-3, "f1": 1e-3,
+                            "f2": ErrorBound(abs=1e-2), "f3": 1e-2},
+                           None, None)
+    st = conv_stage.ConvStage("szlike", bounds=mixed)
+    st.run(flds)
+    assert st.stats.groups == 3            # {f0,f1}, {f2}, {f3}
+    assert st.stats.batched_fields == 2
+    assert st.stats.fallback_fields == 2
+
+
+# ---------------------------------------------------------------------------
+# Property: random mixed bounds, every field meets its own strict bound
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    _spec = st.builds(
+        ErrorBound,
+        rel=st.sampled_from([None, 1e-2, 1e-3]),
+        abs=st.sampled_from([None, 5e-2]),
+        mode=st.sampled_from([None, "strict", "relaxed"]),
+    ).filter(lambda b: b.specified)
+
+    @settings(max_examples=5, deadline=None)
+    @given(specs=st.lists(_spec, min_size=2, max_size=4),
+           default_mode=st.sampled_from(["strict", "relaxed"]))
+    def test_property_mixed_bounds_all_honored(specs, default_mode):
+        flds = {f"f{i}": FIELDS[NAMES[i % len(NAMES)]]
+                for i in range(len(specs))}
+        bounds = {f"f{i}": s for i, s in enumerate(specs)}
+        sess = repro.NeurLZ(epochs=1, mode=default_mode)
+        arc = sess.compress(flds, bounds=bounds)
+        dec = sess.decompress(arc)
+        resolved = resolve_bounds(list(flds), bounds, None, None,
+                                  default_mode=default_mode)
+        for n, x in flds.items():
+            e = arc["fields"][n]
+            assert e["mode"] == resolved[n].mode
+            err = float(np.abs(dec[n].astype(np.float64)
+                               - x.astype(np.float64)).max())
+            assert err <= resolved[n].limit(e["abs_eb"]) * (1 + 1e-9), n
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_mixed_bounds_all_honored():
+        pass

@@ -1,0 +1,112 @@
+"""Public-API surface snapshot.
+
+Locks ``repro.__all__`` plus the signatures of the session/archive surface
+and the legacy dict shims, so an accidental rename, parameter drop or
+default change fails CI instead of shipping silently.  Update the
+snapshots *deliberately* when the API is meant to change.
+"""
+import inspect
+
+import repro
+from repro import api, core
+
+
+def _sig(obj) -> str:
+    return str(inspect.signature(obj))
+
+
+def test_repro_all_snapshot():
+    assert sorted(repro.__all__) == sorted([
+        "NeurLZ", "Archive", "ErrorBound",
+        "ModelConfig", "EngineConfig", "RegulationConfig",
+        "NeurLZConfig", "open",
+    ])
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None
+
+
+SIGNATURES = {
+    # session API
+    "NeurLZ.__init__":
+        "(self, model: 'ModelConfig | None' = None, "
+        "engine: 'EngineConfig | None' = None, "
+        "regulation: 'RegulationConfig | None' = None, *, "
+        "config: 'NeurLZConfig | None' = None, **flat_kwargs)",
+    "NeurLZ.compress":
+        "(self, fields: 'Mapping', bounds=None, *, "
+        "rel_eb: 'float | None' = None, abs_eb: 'float | None' = None, "
+        "collect_stats: 'bool' = True) -> 'Archive'",
+    "NeurLZ.compress_to":
+        "(self, source, sink, bounds=None, *, "
+        "rel_eb: 'float | None' = None, abs_eb: 'float | None' = None, "
+        "collect_stats: 'bool' = True) -> 'Archive'",
+    "NeurLZ.decompress":
+        "(self, archive, *, reassemble: 'bool' = False) -> 'dict'",
+    # archive handle
+    "Archive.open": "(source) -> \"'Archive'\"",
+    "Archive.decode": "(self, name: 'str') -> 'np.ndarray'",
+    "Archive.decode_all":
+        "(self, *, engine: 'str' = 'serial', reassemble: 'bool' = False) "
+        "-> 'dict[str, np.ndarray]'",
+    "Archive.bitrate": "(self, name: 'str | None' = None) -> 'dict'",
+    "Archive.save": "(self, path: 'str') -> 'int'",
+    # bound spec
+    "ErrorBound.__init__":
+        "(self, rel: 'float | None' = None, abs: 'float | None' = None, "
+        "mode: 'str | None' = None) -> None",
+    # legacy dict shims (compat contract: these must not drift either)
+    "core.compress":
+        "(fields: 'Mapping[str, np.ndarray]', rel_eb: 'float | None' = None,"
+        " *, abs_eb: 'float | None' = None, "
+        "config: 'NeurLZConfig' = NeurLZConfig(compressor='szlike', "
+        "mode='strict', epochs=100, batch=10, lr=0.01, seed=0, slice_axis=0,"
+        " skip=True, learn_residual=True, cross_field={}, "
+        "weight_dtype='float32', widths=(4, 4, 6, 6, 8), engine='serial', "
+        "conv_batch=True, field_batching='unroll', group_size=2, "
+        "prefetch=True, field_shard=True, max_resident_bytes=0), "
+        "collect_stats: 'bool' = True, bounds=None) -> 'dict'",
+    "core.decompress":
+        "(arc, *, engine: 'str' = 'serial') -> 'dict[str, np.ndarray]'",
+    "core.load": "(path: 'str')",
+    "core.save": "(path: 'str', arc: 'dict') -> 'int'",
+}
+
+
+def test_signature_snapshot():
+    objs = {
+        "NeurLZ.__init__": repro.NeurLZ.__init__,
+        "NeurLZ.compress": repro.NeurLZ.compress,
+        "NeurLZ.compress_to": repro.NeurLZ.compress_to,
+        "NeurLZ.decompress": repro.NeurLZ.decompress,
+        "Archive.open": repro.Archive.open,
+        "Archive.decode": repro.Archive.decode,
+        "Archive.decode_all": repro.Archive.decode_all,
+        "Archive.bitrate": repro.Archive.bitrate,
+        "Archive.save": repro.Archive.save,
+        "ErrorBound.__init__": repro.ErrorBound.__init__,
+        "core.compress": core.compress,
+        "core.decompress": core.decompress,
+        "core.load": core.load,
+        "core.save": core.save,
+    }
+    mismatches = {}
+    for name, obj in objs.items():
+        got = _sig(obj)
+        if got != SIGNATURES[name]:
+            mismatches[name] = got
+    assert not mismatches, (
+        "public API signature drift (update the snapshot deliberately):\n"
+        + "\n".join(f"  {k}: {v}" for k, v in mismatches.items()))
+
+
+def test_structured_configs_partition_flat_config():
+    import dataclasses
+    flat = {f.name for f in dataclasses.fields(core.NeurLZConfig)}
+    split = [
+        {f.name for f in dataclasses.fields(api.ModelConfig)},
+        {f.name for f in dataclasses.fields(api.EngineConfig)},
+        {f.name for f in dataclasses.fields(api.RegulationConfig)},
+    ]
+    union = set().union(*split)
+    assert union == flat
+    assert sum(len(s) for s in split) == len(union), "overlapping sub-configs"

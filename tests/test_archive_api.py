@@ -1,0 +1,307 @@
+"""The ``Archive`` handle: lazy random-access decode over the streaming
+container, dict-format wrapping, format sniffing, legacy ``core.load``
+routing, and the symmetric batched conventional decode.
+
+The lazy-decode assertions use the :class:`ArchiveReader.entry_reads`
+accounting: opening a streaming container must read *no* entry records
+(footer only), and ``decode(field)`` must read exactly that field's entry
+plus its cross-field aux closure.
+"""
+import io
+
+import numpy as np
+import pytest
+
+import repro
+from repro import core, streaming
+from repro.core import archive as A
+from repro.core.archive_api import Archive
+from repro.data import fields as F
+
+FIELDS = F.make_fields("nyx", shape=(8, 16, 16), seed=7)
+NAMES = list(FIELDS)
+CROSS = {NAMES[0]: (NAMES[1],), NAMES[2]: (NAMES[1],)}
+
+
+def _cfg(engine="serial", **kw):
+    return core.NeurLZConfig(epochs=2, mode="strict", engine=engine, **kw)
+
+
+@pytest.fixture(scope="module")
+def stream_path(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("arc") / "snap.nlzs")
+    streaming.compress(FIELDS, path, rel_eb=1e-3,
+                       config=_cfg("streaming", cross_field=CROSS))
+    return path
+
+
+@pytest.fixture(scope="module")
+def serial_arc():
+    return core.compress(FIELDS, rel_eb=1e-3,
+                         config=_cfg(cross_field=CROSS))
+
+
+@pytest.fixture(scope="module")
+def serial_dec(serial_arc):
+    return core.decompress(serial_arc)
+
+
+# ---------------------------------------------------------------------------
+# Lazy open + random-access decode accounting (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_open_streaming_reads_no_entries(stream_path):
+    with Archive.open(stream_path) as arc:
+        assert arc.streaming
+        assert arc.field_names == NAMES
+        assert arc.reader.entry_reads == []      # footer only
+
+
+def test_decode_reads_only_aux_closure(stream_path, serial_dec):
+    target = NAMES[0]                            # has aux NAMES[1]
+    with Archive.open(stream_path) as arc:
+        out = arc.decode(target)
+        assert set(arc.reader.entry_reads) == {target, NAMES[1]}
+        assert np.array_equal(out, serial_dec[target])
+
+
+def test_decode_no_aux_reads_single_entry(stream_path, serial_dec):
+    target = NAMES[3]                            # no aux
+    with Archive.open(stream_path) as arc:
+        out = arc.decode(target)
+        assert arc.reader.entry_reads == [target]
+        assert np.array_equal(out, serial_dec[target])
+
+
+def test_decode_sweep_does_not_pin_entries(stream_path):
+    """A field-by-field decode sweep must stay O(field) resident: decode
+    reads records transiently, while entry() is the explicit cache."""
+    with Archive.open(stream_path) as arc:
+        for n in NAMES:
+            arc.decode(n)
+        assert arc._entries == {}                # nothing pinned
+        # explicit entry() access caches (one read, reused)
+        arc.entry(NAMES[0])
+        n_reads = len(arc.reader.entry_reads)
+        arc.entry(NAMES[0])
+        assert len(arc.reader.entry_reads) == n_reads
+        assert NAMES[0] in arc._entries
+
+
+# ---------------------------------------------------------------------------
+# Full decode + engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ("serial", "batched"))
+def test_decode_all_matches_serial(stream_path, serial_dec, engine):
+    with Archive.open(stream_path) as arc:
+        dec = arc.decode_all(engine=engine)
+    assert set(dec) == set(NAMES)
+    for n in NAMES:
+        assert np.array_equal(dec[n], serial_dec[n]), (engine, n)
+
+
+def test_dict_archive_wrapping(serial_arc, serial_dec):
+    arc = Archive.from_dict(serial_arc)
+    assert not arc.streaming
+    assert arc.field_names == NAMES
+    assert np.array_equal(arc.decode(NAMES[0]), serial_dec[NAMES[0]])
+    assert arc.bitrate() == serial_arc["bitrate"]
+    assert arc.bitrate(NAMES[0]) == serial_arc["bitrate"][NAMES[0]]
+    assert arc["fields"] is serial_arc["fields"]
+    assert Archive.from_dict(arc) is arc
+
+
+# ---------------------------------------------------------------------------
+# Dict-compat Mapping surface + bitrate parity
+# ---------------------------------------------------------------------------
+
+def test_streaming_mapping_compat(stream_path, serial_arc):
+    with Archive.open(stream_path) as arc:
+        assert arc["kind"] == "neurlz"
+        assert arc["slice_axis"] == serial_arc["slice_axis"]
+        assert arc["compressor"] == serial_arc["compressor"]
+        assert set(arc) == {"kind", "fields", "slice_axis", "compressor",
+                            "timing", "bitrate"}
+        assert A.dumps(arc["fields"]) == A.dumps(serial_arc["fields"])
+        assert arc["bitrate"] == serial_arc["bitrate"]
+        # per-field bitrate without materializing everything
+    with Archive.open(stream_path) as arc:
+        br = arc.bitrate(NAMES[0])
+        assert br == serial_arc["bitrate"][NAMES[0]]
+        assert arc.reader.entry_reads == [NAMES[0]]
+
+
+def test_bitrate_sweep_does_not_pin_entries(stream_path, serial_arc):
+    """Whole-archive bitrate accounting must not leave every entry
+    resident: each record is read transiently, sizes extracted, dropped."""
+    with Archive.open(stream_path) as arc:
+        assert arc.bitrate() == serial_arc["bitrate"]
+        assert len(arc.reader.entry_reads) == len(NAMES)   # read once each
+        assert arc._entries == {}                          # ...but not kept
+
+
+def test_legacy_save_of_loaded_streaming_archive(tmp_path, stream_path,
+                                                 serial_arc):
+    """Regression: ``core.save(path, core.load(streaming_path))`` is the
+    historical streaming -> whole-dict conversion; the lazy Archive handle
+    must materialize through it instead of crashing msgpack."""
+    arc = core.load(stream_path)
+    p = str(tmp_path / "converted.nlz")
+    n = core.save(p, arc)
+    arc.close()
+    assert n > 0
+    reloaded = core.load(p)
+    assert isinstance(reloaded, dict)          # whole-dict format on disk
+    assert A.dumps(reloaded["fields"]) == A.dumps(serial_arc["fields"])
+
+
+def test_core_load_streaming_is_lazy(stream_path, serial_arc):
+    """The eager-load regression fix: ``core.load`` on a streaming
+    container returns the lazy handle, not a fully reassembled dict."""
+    arc = core.load(stream_path)
+    assert isinstance(arc, Archive)
+    assert arc.reader.entry_reads == []
+    # ...while staying drop-in dict-compatible with PR 4 behavior:
+    assert A.dumps(arc["fields"]) == A.dumps(serial_arc["fields"])
+    dec = core.decompress(arc)
+    ref = core.decompress(serial_arc)
+    for n in NAMES:
+        assert np.array_equal(dec[n], ref[n])
+    arc.close()
+
+
+# ---------------------------------------------------------------------------
+# save / open round-trips
+# ---------------------------------------------------------------------------
+
+def test_save_roundtrip_dict(tmp_path, serial_arc):
+    arc = Archive.from_dict(serial_arc)
+    p = str(tmp_path / "snap.nlz")
+    n = arc.save(p)
+    reopened = Archive.open(p)
+    assert not reopened.streaming
+    assert n > 0
+    assert A.dumps(reopened["fields"]) == A.dumps(serial_arc["fields"])
+
+
+def test_save_roundtrip_streaming_is_byte_copy(tmp_path, stream_path):
+    with Archive.open(stream_path) as arc:
+        p = str(tmp_path / "copy.nlzs")
+        n = arc.save(p)
+        assert arc.reader.entry_reads == []      # no decode to copy
+    assert open(p, "rb").read() == open(stream_path, "rb").read()
+    assert n > 0
+
+
+def test_open_from_file_object(stream_path, serial_arc):
+    buf = io.BytesIO(open(stream_path, "rb").read())
+    with Archive.open(buf) as arc:
+        assert arc.streaming
+        assert np.array_equal(arc.decode(NAMES[3]),
+                              core.decompress(serial_arc)[NAMES[3]])
+    buf2 = io.BytesIO(A.dumps(serial_arc))
+    arc2 = Archive.open(buf2)
+    assert not arc2.streaming
+
+
+def test_open_file_object_at_eof(stream_path):
+    """Regression: a handle left at EOF (e.g. just written through) must
+    still sniff the format from the start."""
+    buf = io.BytesIO(open(stream_path, "rb").read())
+    buf.seek(0, io.SEEK_END)
+    with Archive.open(buf) as arc:
+        assert arc.streaming
+        assert arc.field_names == NAMES
+
+
+# ---------------------------------------------------------------------------
+# Blocked archives: manifest-aware decode
+# ---------------------------------------------------------------------------
+
+def test_decode_reassembles_blocked_field(tmp_path):
+    big = F.make_fields("nyx", shape=(16, 16, 16), seed=1)["temperature"]
+    bsrc = streaming.BlockedSource(streaming.DictSource({"huge": big}),
+                                   max_block_bytes=big.nbytes // 3)
+    path = str(tmp_path / "blocked.nlzs")
+    streaming.compress(bsrc, path, rel_eb=1e-3, config=_cfg("streaming"))
+    ref = streaming.decompress(path)["huge"]
+    with Archive.open(path) as arc:
+        assert "huge" in arc.block_manifest
+        out = arc.decode("huge")                 # manifest original name
+        assert np.array_equal(out, ref)
+        dec = arc.decode_all(engine="serial", reassemble=True)
+        assert list(dec) == ["huge"]
+        assert np.array_equal(dec["huge"], ref)
+
+
+# ---------------------------------------------------------------------------
+# Symmetric batched conventional decode (registry capability)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("comp", ("szlike", "szlike-lorenzo", "zfplike"))
+def test_decompress_many_bit_identical(comp):
+    from repro.compressors import registry
+    entry = registry.get(comp)
+    assert entry.decode_batchable
+    rng = np.random.default_rng(0)
+    arcs = {}
+    for i in range(3):
+        x = np.cumsum(rng.standard_normal((6, 8, 8)),
+                      axis=0).astype(np.float32)
+        arcs[f"f{i}"] = entry.compress(x, 1e-3)[0]
+    # odd one out: different shape never joins the stacked dispatch
+    arcs["odd"] = entry.compress(
+        np.cumsum(rng.standard_normal((5, 7)), axis=0).astype(np.float32),
+        1e-3)[0]
+    out = registry.decompress_many(arcs)
+    for n, arc in arcs.items():
+        assert np.array_equal(out[n], entry.decompress(arc)), (comp, n)
+
+
+@pytest.mark.parametrize("comp", ("szlike", "szlike-lorenzo", "zfplike"))
+def test_decompress_batched_returns_detached_arrays(comp):
+    """Batched decode must not hand out views into the stacked [F, ...]
+    array — a view would pin the whole group until its last field dies,
+    defeating the streaming decoder's refcounted residency.  float64 is
+    the trap (astype to the same dtype can be a no-op)."""
+    from repro.compressors import registry
+    entry = registry.get(comp)
+    rng = np.random.default_rng(1)
+    arcs = [entry.compress(np.cumsum(rng.standard_normal((6, 8, 8)), axis=0),
+                           1e-3)[0] for _ in range(3)]
+    for rec, arc in zip(entry.decompress_batched(arcs), arcs):
+        assert rec.dtype == np.dtype(arc["dtype"])
+        base = rec.base if rec.base is not None else rec
+        # resident bytes for one field must be O(field), not O(group)
+        assert base.nbytes <= 2 * rec.nbytes, comp
+
+
+def test_scheduler_run_forwards_bounds(tmp_path):
+    from repro.core.bounds import ErrorBound
+    sub = {n: FIELDS[n] for n in NAMES[:2]}
+    sched = streaming.PipelineScheduler(_cfg("streaming"))
+    path = str(tmp_path / "sched.nlzs")
+    sched.run(streaming.DictSource(sub), path, rel_eb=1e-3,
+              bounds={NAMES[1]: ErrorBound(rel=1e-2, mode="relaxed")})
+    with Archive.open(path) as arc:
+        assert arc.entry(NAMES[0])["mode"] == "strict"
+        assert arc.entry(NAMES[1])["mode"] == "relaxed"
+
+
+def test_iter_decompress_uses_batched_conv_decode(stream_path, serial_dec,
+                                                  monkeypatch):
+    """iter_decompress routes conventional decodes through decompress_many
+    (one call per step) and stays bit-identical."""
+    from repro.compressors import registry
+    calls = []
+    orig = registry.decompress_many
+
+    def spy(arcs, **kw):
+        calls.append(sorted(arcs))
+        return orig(arcs, **kw)
+
+    monkeypatch.setattr(registry, "decompress_many", spy)
+    for name, x in streaming.iter_decompress(stream_path):
+        assert np.array_equal(x, serial_dec[name])
+    assert calls, "conventional decode did not go through decompress_many"
