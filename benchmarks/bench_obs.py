@@ -1,0 +1,67 @@
+"""Observability rows: telemetry overhead guard + Perfetto trace artifact.
+
+Two rows:
+
+* ``obs/telemetry_overhead`` — the same batched-engine snapshot compressed
+  with telemetry disabled and enabled (best-of-N wall-clock after a jit
+  warmup).  The smoke profile **fails** when the enabled run exceeds the
+  disabled one by more than 5% (plus a small absolute slack for scheduler
+  noise) — the "zero-overhead-when-disabled, cheap-when-enabled" contract
+  enforced in CI.
+* ``obs/perfetto_trace`` — a telemetry-enabled *streaming* run exported as
+  Chrome ``trace_event`` JSON (reader/writer threads overlapping compute),
+  written to ``$BENCH_OBS_TRACE`` (default: tempdir) so CI can upload it as
+  a workflow artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+
+from . import common
+from repro import core, obs
+from repro.core import neurlz
+
+# Enabled-vs-disabled guard: relative bound plus an absolute slack so a
+# single scheduler hiccup on a ~1 s run cannot flake CI.
+OVERHEAD_REL = 0.05
+OVERHEAD_ABS_S = 0.1
+
+
+def run(full: bool = False, smoke: bool = False) -> None:
+    shape = (16, 32, 32) if full else (8, 16, 16)
+    epochs = 4 if full else 2
+    flds = common.snapshot_fields(3, shape=shape)
+
+    cfg_off = core.NeurLZConfig(engine="batched", epochs=epochs)
+    t_off, _ = common.timed_compress(flds, 1e-3, cfg_off)
+    tel = obs.Telemetry()
+    cfg_on = dataclasses.replace(cfg_off, telemetry=tel)
+    t_on, _ = common.timed_compress(flds, 1e-3, cfg_on)
+    overhead = (t_on - t_off) / t_off
+    ok = t_on <= t_off * (1.0 + OVERHEAD_REL) + OVERHEAD_ABS_S
+    common.csv_row(
+        "obs/telemetry_overhead", t_on * 1e6,
+        f"disabled_us={t_off * 1e6:.1f};overhead_pct={overhead * 100:.2f};"
+        f"spans={len(tel.spans)};within_bound={ok}")
+    if smoke and not ok:
+        raise AssertionError(
+            f"telemetry-enabled smoke run {t_on:.3f}s exceeds disabled "
+            f"{t_off:.3f}s by more than {OVERHEAD_REL:.0%} "
+            f"(+{OVERHEAD_ABS_S}s slack)")
+
+    tel2 = obs.Telemetry()
+    cfg_stream = core.NeurLZConfig(engine="streaming", epochs=epochs,
+                                   telemetry=tel2)
+    neurlz.compress_impl(flds, 1e-3, config=cfg_stream)
+    out = os.environ.get(
+        "BENCH_OBS_TRACE",
+        os.path.join(tempfile.gettempdir(), "neurlz_trace.json"))
+    nbytes = tel2.export_chrome_trace(out)
+    events = tel2.chrome_trace()["traceEvents"]
+    tids = {e["tid"] for e in events if e.get("ph") == "X"}
+    common.csv_row(
+        "obs/perfetto_trace", 0.0,
+        f"path={out};bytes={nbytes};events={len(events)};threads={len(tids)}")
+    assert len(tids) >= 2, "streaming trace should span multiple threads"

@@ -69,8 +69,33 @@ def run_neurlz(fields_dict, rel_eb, *, compressor="szlike", mode="strict",
     return arc, dec, out, {"compress_s": t_comp, "decompress_s": t_dec}
 
 
+# Ledger registry: every csv_row lands here too, so ``benchmarks.run``
+# can persist a machine-readable run record (BENCH_PR7.json) that
+# ``scripts/perf_summary.py --compare`` diffs across commits.
+ROWS: list[dict] = []
+
+
+def _parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` derived strings -> dict (floats where they parse)."""
+    out: dict = {}
+    for part in str(derived).split(";"):
+        k, sep, v = part.partition("=")
+        if not sep:
+            if part.strip():
+                out.setdefault("notes", []).append(part.strip())
+            continue
+        v = v.strip()
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            out[k.strip()] = v
+    return out
+
+
 def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+    ROWS.append({"name": name, "us_per_call": float(us_per_call),
+                 "derived": _parse_derived(derived)})
 
 
 def peak_rss_bytes() -> int:

@@ -8,6 +8,8 @@ EXPERIMENTS.md maps each prefix to the paper table/figure it reproduces).
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -25,6 +27,7 @@ MODULES = [
     "bench_kernels",            # Pallas kernel validation
     "bench_roofline",           # §Roofline table from dry-run records
     "bench_streaming",          # bounded-memory pipeline vs in-memory engine
+    "bench_obs",                # telemetry overhead guard + Perfetto trace
 ]
 
 
@@ -35,7 +38,13 @@ MODULES_SMOKE = [
     "bench_kernels",
     "bench_scalability",
     "bench_streaming",
+    "bench_obs",
 ]
+
+# Committed perf ledger (repo root): the smoke profile's machine-readable
+# run record; scripts/perf_summary.py --compare diffs two of these and
+# fails on >25% wall-clock regression.
+LEDGER = "BENCH_PR7.json"
 
 
 def main() -> None:
@@ -46,6 +55,9 @@ def main() -> None:
                     help="tiny-field CI profile (fast, regression-only)")
     ap.add_argument("--only", default=None,
                     help="run a single benchmark module")
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="write the run's rows as JSON here (--smoke "
+                         f"defaults to <repo-root>/{LEDGER})")
     args = ap.parse_args()
 
     failures = 0
@@ -73,6 +85,19 @@ def main() -> None:
         print(f"# --only {args.only!r} matched no module in "
               f"{modules}", file=sys.stderr)
         sys.exit(2)
+    ledger = args.ledger
+    if ledger is None and args.smoke and not args.only:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        ledger = os.path.join(root, LEDGER)
+    if ledger:
+        from . import common
+        with open(ledger, "w") as f:
+            json.dump({"profile": "smoke" if args.smoke else
+                       ("full" if args.full else "default"),
+                       "modules": modules, "failures": failures,
+                       "rows": common.ROWS}, f, indent=1, default=str)
+            f.write("\n")
+        print(f"# ledger -> {ledger} ({len(common.ROWS)} rows)", flush=True)
     if failures:
         sys.exit(1)
 

@@ -85,6 +85,10 @@ def main():
     ap.add_argument("--decode-field", default=None,
                     help="also time a lazy single-field random-access "
                          "decode of this field (streaming archives)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record telemetry and write a Chrome/Perfetto "
+                         "trace_event JSON here (load it at ui.perfetto.dev);"
+                         " PATH.jsonl gets the line-per-event log")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -100,11 +104,13 @@ def main():
     except argparse.ArgumentTypeError as exc:
         ap.error(str(exc))
 
+    tel = repro.Telemetry() if args.trace_out else None
     sess = repro.NeurLZ(
         model=repro.ModelConfig(epochs=args.epochs, cross_field=cross),
         engine=repro.EngineConfig(
             engine=args.engine, compressor=args.compressor,
-            max_resident_bytes=int(args.max_resident_mb * 2**20)),
+            max_resident_bytes=int(args.max_resident_mb * 2**20),
+            telemetry=tel),
         regulation=repro.RegulationConfig(mode=args.mode))
     print(f"[compress] {args.dataset} {shape} eb={args.eb} mode={args.mode} "
           f"epochs={args.epochs} cross_field=on engine={args.engine}"
@@ -171,6 +177,15 @@ def main():
             2 * eb if mode == "relaxed" else np.inf)
         assert err <= limit * (1 + 1e-9), "bound violated!"
     print("[ok] all error bounds verified")
+
+    if tel is not None:
+        tel.export_chrome_trace(args.trace_out)
+        tel.export_jsonl(args.trace_out + ".jsonl")
+        s = tel.summary()
+        top = sorted(s["spans"].items(), key=lambda kv: -kv[1]["wall_s"])[:6]
+        print(f"[trace]    {args.trace_out} (+.jsonl): "
+              f"{sum(a['count'] for _, a in top)} spans, top wall: "
+              + ", ".join(f"{n} {a['wall_s']:.2f}s" for n, a in top))
 
 
 if __name__ == "__main__":

@@ -1,5 +1,16 @@
-"""Summarize the §Perf iteration records (experiments/perf + baselines)."""
+"""Summarize the §Perf iteration records (experiments/perf + baselines).
+
+Also diffs two benchmark ledgers (``benchmarks.run --smoke`` writes
+``BENCH_PR7.json`` at the repo root)::
+
+    python scripts/perf_summary.py --compare old.json new.json
+
+prints per-row wall-clock deltas and exits nonzero when any timed row
+regressed by more than the threshold (default 25%).
+"""
+import argparse
 import json
+import sys
 
 CELLS = {
     "A (qwen3-8b train_4k 16x16)": [
@@ -40,7 +51,46 @@ CELLS = {
 }
 
 
-def main():
+REGRESSION_PCT = 25.0
+
+
+def compare_ledgers(old_path: str, new_path: str,
+                    threshold_pct: float = REGRESSION_PCT) -> int:
+    """Per-row wall-clock deltas between two ``benchmarks.run`` ledgers.
+
+    Rows match by ``name``; a row only counts toward the regression verdict
+    when both sides carry a positive ``us_per_call`` (0.0 rows are
+    informational — rate/quality tables, artifact pointers).  Returns the
+    number of rows regressed past ``threshold_pct``.
+    """
+    old = {r["name"]: r for r in json.load(open(old_path))["rows"]}
+    new = {r["name"]: r for r in json.load(open(new_path))["rows"]}
+    regressed = 0
+    print(f"{'row':44s} {'old_us':>12s} {'new_us':>12s} {'delta':>8s}")
+    for name, nr in new.items():
+        orow = old.get(name)
+        if orow is None:
+            print(f"{name:44s} {'(new)':>12s} {nr['us_per_call']:12.1f}")
+            continue
+        o, n = orow["us_per_call"], nr["us_per_call"]
+        if o <= 0.0 or n <= 0.0:
+            continue
+        delta = 100.0 * (n - o) / o
+        flag = ""
+        if delta > threshold_pct:
+            regressed += 1
+            flag = f"  << REGRESSION (> {threshold_pct:g}%)"
+        print(f"{name:44s} {o:12.1f} {n:12.1f} {delta:+7.1f}%{flag}")
+    for name in old:
+        if name not in new:
+            print(f"{name:44s} (dropped)")
+    if regressed:
+        print(f"\n{regressed} row(s) regressed past {threshold_pct:g}% "
+              "wall-clock")
+    return regressed
+
+
+def summarize_cells():
     for cell, rows in CELLS.items():
         print(f"\n## {cell}")
         print(f"{'iteration':38s} {'comp_ms':>9s} {'mem_ms':>9s} "
@@ -57,6 +107,22 @@ def main():
                   f"{t['memory_s']*1e3:9.1f} {t['collective_s']*1e3:9.1f} "
                   f"{r['memory']['peak_hbm_bytes']/2**30:8.2f} "
                   f"{u if u is None else format(u, '.3f'):>7}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"),
+                    help="diff two benchmark ledger JSONs "
+                         "(benchmarks.run --smoke output)")
+    ap.add_argument("--threshold", type=float, default=REGRESSION_PCT,
+                    help="regression threshold in percent "
+                         f"(default {REGRESSION_PCT:g})")
+    args = ap.parse_args()
+    if args.compare:
+        regressed = compare_ledgers(args.compare[0], args.compare[1],
+                                    threshold_pct=args.threshold)
+        sys.exit(1 if regressed else 0)
+    summarize_cells()
 
 
 if __name__ == "__main__":

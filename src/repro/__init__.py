@@ -24,12 +24,16 @@ cheap and does not flip the x64 switch; touching any of these loads
     ModelConfig / EngineConfig / RegulationConfig
                               the structured session configuration
     NeurLZConfig              the flat legacy config (still accepted)
+    Telemetry / TelemetryConfig
+                              observability handle (``repro.obs``; spans,
+                              counters, per-field learning traces)
     open(path)                Archive.open convenience
 """
 __version__ = "1.0.0"
 
 __all__ = ["NeurLZ", "Archive", "ErrorBound", "ModelConfig", "EngineConfig",
-           "RegulationConfig", "NeurLZConfig", "open"]
+           "RegulationConfig", "NeurLZConfig", "Telemetry", "TelemetryConfig",
+           "open"]
 
 _API = frozenset(__all__)   # every lazy attribute resolves via repro.api
 

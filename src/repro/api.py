@@ -36,6 +36,8 @@ from .core import neurlz
 from .core.archive_api import Archive
 from .core.bounds import ErrorBound
 from .core.neurlz import NeurLZConfig
+from .obs import telemetry as obs
+from .obs.telemetry import Telemetry, TelemetryConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +68,8 @@ class EngineConfig:
     prefetch: bool = True               # overlap conv stage with training
     field_shard: bool = True            # spread field groups over devices
     max_resident_bytes: int = 0         # streaming residency budget (0=off)
+    telemetry: object | None = None     # repro.obs.Telemetry handle (None =
+    #   disabled; instrumentation degrades to shared no-op singletons)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,7 +184,10 @@ class NeurLZ:
                                    config=self.config,
                                    collect_stats=collect_stats,
                                    bounds=bounds)
-        return Archive.from_dict(arc)
+        handle = Archive.from_dict(arc)
+        if self.engine.telemetry is not None:
+            handle.telemetry = self.engine.telemetry
+        return handle
 
     def compress_to(self, source, sink, bounds=None, *,
                     rel_eb: float | None = None,
@@ -203,6 +210,8 @@ class NeurLZ:
                                    bounds=bounds)
         arc = Archive.open(sink)
         arc.report = report
+        if self.engine.telemetry is not None:
+            arc.telemetry = self.engine.telemetry
         return arc
 
     # -- decode -------------------------------------------------------------
@@ -212,6 +221,9 @@ class NeurLZ:
         this session's engine (``batched`` fuses inference dispatches;
         anything else decodes serially)."""
         arc = Archive.from_dict(archive)
+        if (self.engine.telemetry is not None
+                and arc.telemetry is obs.NULL):
+            arc.telemetry = self.engine.telemetry
         engine = "batched" if self.engine.engine == "batched" else "serial"
         return arc.decode_all(engine=engine, reassemble=reassemble)
 
@@ -228,8 +240,8 @@ def open(path) -> Archive:  # noqa: A001 - deliberate, repro.open(path)
 
 
 __all__ = ["NeurLZ", "Archive", "ErrorBound", "ModelConfig", "EngineConfig",
-           "RegulationConfig", "NeurLZConfig", "join_config", "split_config",
-           "open"]
+           "RegulationConfig", "NeurLZConfig", "Telemetry", "TelemetryConfig",
+           "join_config", "split_config", "open"]
 
 # Re-exported for API-surface completeness (resolve_bounds powers the
 # ``bounds=`` argument coercion rules documented above).

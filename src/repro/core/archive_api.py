@@ -36,6 +36,7 @@ from collections.abc import Mapping
 import numpy as np
 
 from ..compressors import registry
+from ..obs import telemetry as obs_lib
 from . import archive as arc_io
 from . import neurlz
 
@@ -56,6 +57,9 @@ class Archive(Mapping):
         self._entries: dict[str, dict] = {}     # streaming: cached entries
         self._bitrate: dict | None = None
         self.report: dict | None = None    # compression report, if any
+        self.telemetry = obs_lib.NULL      # assign a Telemetry handle to
+        #   trace decodes ("decode" spans, "archive.entry_reads" counter);
+        #   repro.NeurLZ(telemetry=...) sets it on archives it opens
 
     # -- constructors -------------------------------------------------------
 
@@ -134,6 +138,7 @@ class Archive(Mapping):
             return self._arc["fields"][name]
         if name not in self._entries:
             self._entries[name] = self._reader.read_entry(name)
+            self.telemetry.counter("archive.entry_reads").add()
         return self._entries[name]
 
     def _entry_transient(self, name: str) -> dict:
@@ -143,6 +148,7 @@ class Archive(Mapping):
         container does not leave every payload resident."""
         if not self.streaming or name in self._entries:
             return self.entry(name)
+        self.telemetry.counter("archive.entry_reads").add()
         return self._reader.read_entry(name)
 
     # -- decode -------------------------------------------------------------
@@ -163,16 +169,17 @@ class Archive(Mapping):
         if man is not None:
             parts = [self.decode(bn) for bn, _, _ in man["blocks"]]
             return np.concatenate(parts, axis=man["axis"])
-        e = self._entry_transient(name)
-        conv = {name: e["conv"]}
-        for a in e["aux"]:
-            if a not in conv:
-                conv[a] = self._entry_transient(a)["conv"]
-        recs = registry.decompress_many(conv)
-        slice_axis = self["slice_axis"]
-        return neurlz.decode_field_entry(e, recs[name],
-                                         [recs[a] for a in e["aux"]],
-                                         slice_axis)
+        with self.telemetry.span("decode", field=name):
+            e = self._entry_transient(name)
+            conv = {name: e["conv"]}
+            for a in e["aux"]:
+                if a not in conv:
+                    conv[a] = self._entry_transient(a)["conv"]
+            recs = registry.decompress_many(conv)
+            slice_axis = self["slice_axis"]
+            return neurlz.decode_field_entry(e, recs[name],
+                                             [recs[a] for a in e["aux"]],
+                                             slice_axis)
 
     def decode_all(self, *, engine: str = "serial",
                    reassemble: bool = False) -> dict[str, np.ndarray]:

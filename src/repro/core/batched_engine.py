@@ -57,6 +57,7 @@ import numpy as np
 
 from ..compressors import registry
 from ..distributed import sharding as shardlib
+from ..obs import telemetry as obs_lib
 from ..optim import adamw_init, adamw_update, cosine_schedule
 from . import bounds as bounds_lib
 from . import conv_stage as conv_stage_lib
@@ -371,20 +372,28 @@ def group_results(state: _GroupState):
 
 
 def _finalize_group(state: _GroupState, fields, recs, ebs, conv_arcs, config,
-                    collect_stats, out_fields, on_entry=None) -> None:
+                    collect_stats, out_fields, on_entry=None,
+                    tel=obs_lib.NULL) -> None:
     """Blocking stage: fetch residuals, enhancement, entry packing."""
     config = group_config(config, state.group)
-    for f, name, hist, resid in group_results(state):
-        x = np.asarray(fields[name])
-        aux_names = neurlz._aux_names(config, name, fields)
-        entry = neurlz.pack_entry(
-            config, conv_arcs[name], state.params[f], state.stats[f],
-            aux_names, ebs[name], state.net_cfg, hist, collect_stats)
-        neurlz.finalize_entry(entry, x, recs[name], resid, ebs[name],
-                              state.stats[f], config)
-        out_fields[name] = entry
-        if on_entry is not None:
-            on_entry(name, entry)
+    with tel.span("finalize", group=",".join(state.group.names)):
+        for f, name, hist, resid in group_results(state):
+            x = np.asarray(fields[name])
+            aux_names = neurlz._aux_names(config, name, fields)
+            entry = neurlz.pack_entry(
+                config, conv_arcs[name], state.params[f], state.stats[f],
+                aux_names, ebs[name], state.net_cfg, hist, collect_stats)
+            neurlz.finalize_entry(entry, x, recs[name], resid, ebs[name],
+                                  state.stats[f], config)
+            if tel.enabled and tel.config.learning_traces:
+                obs_lib.learning_trace(
+                    tel, name, hist, eb=ebs[name],
+                    vrange=neurlz.field_vrange(x),
+                    base_bytes=neurlz.entry_base_bytes(entry),
+                    n_points=int(x.size), mode=config.mode)
+            out_fields[name] = entry
+            if on_entry is not None:
+                on_entry(name, entry)
 
 
 # ---------------------------------------------------------------------------
@@ -411,78 +420,89 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
     mode-homogeneous so each fused dispatch keeps one network signature.
     """
     config = config or neurlz.NeurLZConfig(engine="batched")
+    tel = obs_lib.of(config)
     t0 = time.time()
-    tcfg = config.train_config()
-    resolved = None
-    if bounds is not None:
-        resolved = bounds_lib.resolve_bounds(list(fields), bounds, rel_eb,
-                                             abs_eb,
-                                             default_mode=config.mode)
-    modes = ({n: b.mode for n, b in resolved.items()}
-             if resolved is not None else None)
-    groups = plan_groups(fields, config, modes=modes)
+    with tel.span("compress", root=True, engine="batched",
+                  fields=len(fields)):
+        tcfg = config.train_config()
+        resolved = None
+        if bounds is not None:
+            resolved = bounds_lib.resolve_bounds(list(fields), bounds,
+                                                 rel_eb, abs_eb,
+                                                 default_mode=config.mode)
+        modes = ({n: b.mode for n, b in resolved.items()}
+                 if resolved is not None else None)
+        groups = plan_groups(fields, config, modes=modes)
 
-    conv_arcs, recs, ebs = {}, {}, {}
-    conv_dev = _conv_device() if config.prefetch else None
-    # Shared conventional stage: each call batches the handed fields by
-    # (shape, dtype, bound spec) through the fused compressor entry.
-    stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
-                                     batch=config.conv_batch, bounds=resolved)
+        conv_arcs, recs, ebs = {}, {}, {}
+        conv_dev = _conv_device() if config.prefetch else None
+        # Shared conventional stage: each call batches the handed fields by
+        # (shape, dtype, bound spec) through the fused compressor entry.
+        stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
+                                         batch=config.conv_batch,
+                                         bounds=resolved, telemetry=tel)
 
-    def conv_compress(names):
-        todo = {n: fields[n] for n in names if n not in conv_arcs}
-        if not todo:
-            return
-        ctx = jax.default_device(conv_dev) if conv_dev is not None \
-            else contextlib.nullcontext()
-        with ctx:
-            for name, (arc, rec) in stage.run(todo).items():
-                conv_arcs[name], recs[name], ebs[name] = \
-                    arc, rec, arc["abs_eb"]
+        def conv_compress(names):
+            todo = {n: fields[n] for n in names if n not in conv_arcs}
+            if not todo:
+                return
+            ctx = jax.default_device(conv_dev) if conv_dev is not None \
+                else contextlib.nullcontext()
+            with ctx:
+                for name, (arc, rec) in stage.run(todo).items():
+                    conv_arcs[name], recs[name], ebs[name] = \
+                        arc, rec, arc["abs_eb"]
 
-    # Cross-field aux may reference fields in later groups; resolve the whole
-    # conventional stage upfront in that case.  Otherwise it runs lazily per
-    # group, overlapping earlier groups' device-side training.
-    if config.cross_field or not config.prefetch:
-        conv_compress(list(fields))
+        # Cross-field aux may reference fields in later groups; resolve the
+        # whole conventional stage upfront in that case.  Otherwise it runs
+        # lazily per group, overlapping earlier groups' device-side training.
+        if config.cross_field or not config.prefetch:
+            conv_compress(list(fields))
 
-    # Unroll-mode field sharding: spread groups across training devices —
-    # all but the conventional-compressor device, so conv work never shares
-    # a queue with enhancer training.
-    train_devs = jax.devices()
-    if conv_dev is not None and len(train_devs) > 1:
-        train_devs = train_devs[:-1]
-    t_train0 = time.time()
-    conv_before = stage.stats.conv_s
-    # Per-group completion: finalize a group as soon as enough later groups
-    # are dispatched to keep every training device's queue non-empty
-    # (depth >= devices + 1), instead of holding all groups' tensors until
-    # an end-of-run finalize pass.
-    depth = max(2, len(train_devs) + 1)
-    out_fields: dict = {}
-    states: list[_GroupState] = []
-    for gi, group in enumerate(groups):
-        conv_compress(group.names)
-        dev = train_devs[gi % len(train_devs)] \
-            if (config.field_shard and len(train_devs) > 1
-                and config.field_batching == "unroll") else None
-        state = _prepare_group(group, fields, recs, ebs, config, tcfg,
-                               device=dev)
-        _dispatch_group(state, config, tcfg)   # async: no host sync
-        states.append(state)
-        if len(states) >= depth:
-            _finalize_group(states.pop(0), fields, recs, ebs, conv_arcs,
-                            config, collect_stats, out_fields, on_entry)
-    for state in states:
-        _finalize_group(state, fields, recs, ebs, conv_arcs, config,
-                        collect_stats, out_fields, on_entry)
-    # Conventional compression that ran lazily inside the loop belongs to
-    # conv_s, not train_s (keep the two disjoint, like the serial engine).
-    train_time = (time.time() - t_train0) - (stage.stats.conv_s - conv_before)
+        # Unroll-mode field sharding: spread groups across training devices —
+        # all but the conventional-compressor device, so conv work never
+        # shares a queue with enhancer training.
+        train_devs = jax.devices()
+        if conv_dev is not None and len(train_devs) > 1:
+            train_devs = train_devs[:-1]
+        t_train0 = time.time()
+        conv_before = stage.stats.conv_s
+        # Per-group completion: finalize a group as soon as enough later
+        # groups are dispatched to keep every training device's queue
+        # non-empty (depth >= devices + 1), instead of holding all groups'
+        # tensors until an end-of-run finalize pass.
+        depth = max(2, len(train_devs) + 1)
+        out_fields: dict = {}
+        states: list[_GroupState] = []
+        for gi, group in enumerate(groups):
+            conv_compress(group.names)
+            dev = train_devs[gi % len(train_devs)] \
+                if (config.field_shard and len(train_devs) > 1
+                    and config.field_batching == "unroll") else None
+            with tel.span("train", group=",".join(group.names)):
+                state = _prepare_group(group, fields, recs, ebs, config,
+                                       tcfg, device=dev)
+                _dispatch_group(state, config, tcfg)   # async: no host sync
+            states.append(state)
+            if len(states) >= depth:
+                _finalize_group(states.pop(0), fields, recs, ebs, conv_arcs,
+                                config, collect_stats, out_fields, on_entry,
+                                tel=tel)
+        for state in states:
+            _finalize_group(state, fields, recs, ebs, conv_arcs, config,
+                            collect_stats, out_fields, on_entry, tel=tel)
+        # Conventional compression that ran lazily inside the loop belongs
+        # to conv_s, not train_s (keep the two disjoint, like the serial
+        # engine).
+        train_time = ((time.time() - t_train0)
+                      - (stage.stats.conv_s - conv_before))
 
-    timing = {"total_s": time.time() - t0, "conv_s": stage.stats.conv_s,
-              "train_s": train_time, "conv_stage": stage.stats.as_dict()}
-    return neurlz.assemble_archive(fields, out_fields, config, timing)
+        timing = obs_lib.build_timing(
+            tel, total_s=time.time() - t0, conv_s=stage.stats.conv_s,
+            train_s=train_time, conv_stage=stage.stats.as_dict())
+        with tel.span("assemble"):
+            return neurlz.assemble_archive(fields, out_fields, config,
+                                           timing)
 
 
 def decompress(arc) -> dict[str, np.ndarray]:

@@ -35,6 +35,7 @@ from typing import Mapping
 import numpy as np
 
 from ..compressors import registry
+from ..obs import telemetry as obs
 
 
 @dataclasses.dataclass
@@ -85,7 +86,7 @@ class ConvStage:
 
     def __init__(self, compressor: str, rel_eb: float | None = None,
                  abs_eb: float | None = None, *, batch: bool = True,
-                 bounds: Mapping | None = None):
+                 bounds: Mapping | None = None, telemetry=None):
         self.entry = registry.get(compressor)   # unknown name -> ValueError
         self.rel_eb = rel_eb
         self.abs_eb = abs_eb
@@ -93,6 +94,7 @@ class ConvStage:
         # Per-field ErrorBound specs; fields absent here use the run scalars.
         self.bounds = dict(bounds) if bounds else None
         self.stats = ConvStats()
+        self.tel = telemetry if telemetry is not None else obs.NULL
 
     def bound_for(self, name: str) -> tuple[float | None, float | None]:
         """``(rel_eb, abs_eb)`` this run will hand the compressor for one
@@ -124,22 +126,32 @@ class ConvStage:
         out: dict[str, tuple[dict, np.ndarray]] = {}
         arrs = {n: np.asarray(x) for n, x in fields.items()}
         metas = {n: (a.shape, a.dtype) for n, a in arrs.items()}
-        for group in self.plan(metas):
-            self.stats.groups += 1
-            dtype = metas[group[0]][1]
-            rel, ab = self.bound_for(group[0])   # one spec per group, by plan
-            if (batch and len(group) > 1
-                    and self.entry.batch_supports(dtype)):
-                results = self.entry.compress_batched(
-                    [arrs[n] for n in group], rel, abs_eb=ab)
-                self.stats.calls += 1
-                self.stats.batched_fields += len(group)
-                out.update(zip(group, results))
-            else:
-                for n in group:
-                    out[n] = self.entry.compress(arrs[n], rel, abs_eb=ab)
+        tel = self.tel
+        with tel.span("conv", fields=len(arrs)) as sp:
+            calls0 = self.stats.calls
+            for group in self.plan(metas):
+                self.stats.groups += 1
+                tel.counter("conv.groups").add()
+                tel.gauge("conv.group_size").set(len(group))
+                dtype = metas[group[0]][1]
+                rel, ab = self.bound_for(group[0])  # one spec/group, by plan
+                if (batch and len(group) > 1
+                        and self.entry.batch_supports(dtype)):
+                    results = self.entry.compress_batched(
+                        [arrs[n] for n in group], rel, abs_eb=ab)
                     self.stats.calls += 1
-                    self.stats.fallback_fields += 1
+                    self.stats.batched_fields += len(group)
+                    tel.counter("conv.dispatches").add()
+                    tel.counter("conv.batched_fields").add(len(group))
+                    out.update(zip(group, results))
+                else:
+                    for n in group:
+                        out[n] = self.entry.compress(arrs[n], rel, abs_eb=ab)
+                        self.stats.calls += 1
+                        self.stats.fallback_fields += 1
+                        tel.counter("conv.dispatches").add()
+                        tel.counter("conv.fallback_fields").add()
+            sp.set(calls=self.stats.calls - calls0)
         self.stats.fields += len(arrs)
         self.stats.conv_s += time.time() - t0
         return out

@@ -14,6 +14,8 @@ def psnr(orig: np.ndarray, rec: np.ndarray) -> float:
     r = np.asarray(rec, dtype=np.float64)
     finite = np.isfinite(o)
     o, r = o[finite], r[finite]
+    if o.size == 0:             # all-NaN/Inf field: no reference values
+        return float("nan")
     vrange = o.max() - o.min()
     if vrange == 0:
         vrange = max(abs(o.max()), 1.0)
@@ -27,6 +29,8 @@ def mae(orig: np.ndarray, rec: np.ndarray) -> float:
     o = np.asarray(orig, dtype=np.float64)
     r = np.asarray(rec, dtype=np.float64)
     finite = np.isfinite(o)
+    if not finite.any():
+        return float("nan")
     return float(np.mean(np.abs(o[finite] - r[finite])))
 
 
@@ -35,6 +39,8 @@ def nrmse(orig: np.ndarray, rec: np.ndarray) -> float:
     r = np.asarray(rec, dtype=np.float64)
     finite = np.isfinite(o)
     o, r = o[finite], r[finite]
+    if o.size == 0:
+        return float("nan")
     vrange = max(o.max() - o.min(), 1e-300)
     return float(np.sqrt(np.mean((o - r) ** 2)) / vrange)
 

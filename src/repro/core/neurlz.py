@@ -43,6 +43,7 @@ import numpy as np
 
 from .. import compressors
 from ..compressors import outliers as outlier_codec
+from ..obs import telemetry as obs_lib
 from . import archive as arc_io
 from . import bounds as bounds_lib
 from . import conv_stage as conv_stage_lib
@@ -70,6 +71,8 @@ class NeurLZConfig:
     prefetch: bool = True               # overlap CPU conv stage with training
     field_shard: bool = True            # spread field groups over devices
     max_resident_bytes: int = 0         # streaming residency budget (0 = off)
+    telemetry: object | None = None     # repro.obs.Telemetry handle (None =
+    #   disabled: every instrumentation point is a shared no-op singleton)
 
     def net_config(self, c_in: int) -> skipping_dnn.SkippingDNNConfig:
         return skipping_dnn.SkippingDNNConfig(
@@ -226,66 +229,127 @@ def compress_impl(fields, rel_eb=None, *, abs_eb=None,
                             collect_stats=collect_stats, bounds=bounds)
 
 
+def field_vrange(x: np.ndarray) -> float:
+    """Finite value range of a field (0.0 when nothing is finite) — the
+    reference the learning-trace PSNR predictions are computed against."""
+    v = np.asarray(x, dtype=np.float64)
+    v = v[np.isfinite(v)]
+    if v.size == 0:
+        return 0.0
+    return float(v.max() - v.min())
+
+
+def entry_base_bytes(entry: dict) -> float:
+    """Conv payload + enhancer weight bytes of a packed entry — the
+    epoch-independent part of the learning-trace bitrate prediction."""
+    return (compressors.archive_nbytes(entry["conv"])
+            + entry["weights"]["nbytes"])
+
+
+def _sample_psnr_hook(tel, x, rec, inputs, eb, stats, config, net_cfg):
+    """Per-epoch measured-PSNR hook for the serial trainer (telemetry
+    ``sample_psnr`` mode): predicts the residual on a few sampled slices
+    after every epoch and scores the pre-regulation enhancement against the
+    original.  Returns ``(on_epoch, samples)`` — ``(None, None)`` when
+    disabled (the fused engines have no per-epoch host hook)."""
+    if not (tel.enabled and tel.config.sample_psnr):
+        return None, None
+    n = inputs.shape[0]
+    k = max(1, min(int(tel.config.sample_slices), n))
+    idx = np.linspace(0, n - 1, k).astype(int)
+    x_s = np.moveaxis(np.asarray(x), config.slice_axis, 0)[idx]
+    rec_s = np.moveaxis(np.asarray(rec), config.slice_axis, 0)[idx]
+    inp_s = np.ascontiguousarray(inputs[idx])
+    samples: list[float] = []
+
+    def on_epoch(epoch, params, loss):
+        resid = online_trainer.predict_residual(params, inp_s, net_cfg)
+        enh = _apply_enhancement(rec_s, resid, eb, x_s.dtype, stats, config)
+        samples.append(metrics.psnr(x_s, enh))
+
+    return on_epoch, samples
+
+
 def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats,
                      bounds=None):
+    tel = obs_lib.of(config)
     t0 = time.time()
-    # Per-field error-bound specs (None -> the legacy single-scalar path).
-    resolved = None
-    if bounds is not None:
-        resolved = bounds_lib.resolve_bounds(list(fields), bounds, rel_eb,
-                                             abs_eb,
-                                             default_mode=config.mode)
-    # Shared conventional stage: the whole snapshot is one plan, so fields
-    # sharing a (shape, dtype, bound spec) compress through the fused entry.
-    stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
-                                     batch=config.conv_batch, bounds=resolved)
-    conv = stage.run(fields)
-    conv_arcs = {n: arc for n, (arc, _) in conv.items()}
-    recs = {n: rec for n, (_, rec) in conv.items()}
-    ebs = {n: arc["abs_eb"] for n, arc in conv_arcs.items()}
+    with tel.span("compress", root=True, engine="serial",
+                  fields=len(fields)):
+        # Per-field error-bound specs (None -> legacy single-scalar path).
+        resolved = None
+        if bounds is not None:
+            resolved = bounds_lib.resolve_bounds(list(fields), bounds,
+                                                 rel_eb, abs_eb,
+                                                 default_mode=config.mode)
+        # Shared conventional stage: the whole snapshot is one plan, so
+        # fields sharing a (shape, dtype, bound spec) compress through the
+        # fused entry.
+        stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
+                                         batch=config.conv_batch,
+                                         bounds=resolved, telemetry=tel)
+        conv = stage.run(fields)
+        conv_arcs = {n: arc for n, (arc, _) in conv.items()}
+        recs = {n: rec for n, (_, rec) in conv.items()}
+        ebs = {n: arc["abs_eb"] for n, arc in conv_arcs.items()}
 
-    # A reconstruction stays resident only until its last consumer (its own
-    # finalize + every field listing it as cross-field aux) is done — the
-    # streaming pipeline's refcount idea in miniature.
-    rec_refs = {n: 1 for n in fields}
-    for n in fields:
-        for a in _aux_names(config, n, fields):
-            rec_refs[a] += 1
+        # A reconstruction stays resident only until its last consumer (its
+        # own finalize + every field listing it as cross-field aux) is done
+        # — the streaming pipeline's refcount idea in miniature.
+        rec_refs = {n: 1 for n in fields}
+        for n in fields:
+            for a in _aux_names(config, n, fields):
+                rec_refs[a] += 1
 
-    out_fields = {}
-    train_time = 0.0
-    for name, x in fields.items():
-        x = np.asarray(x)
-        eb = ebs[name]
-        fcfg = field_config(config,
-                            resolved[name].mode if resolved else None)
-        aux_names = _aux_names(fcfg, name, fields)
-        aux = [recs[a] for a in aux_names]
-        net_cfg = fcfg.net_config(1 + len(aux))
-        tcfg = fcfg.train_config()
+        out_fields = {}
+        train_time = 0.0
+        for name, x in fields.items():
+            x = np.asarray(x)
+            eb = ebs[name]
+            fcfg = field_config(config,
+                                resolved[name].mode if resolved else None)
+            aux_names = _aux_names(fcfg, name, fields)
+            aux = [recs[a] for a in aux_names]
+            net_cfg = fcfg.net_config(1 + len(aux))
+            tcfg = fcfg.train_config()
 
-        inputs, targets, stats = build_dataset(x, recs[name], eb, aux, fcfg)
+            with tel.span("train", field=name):
+                inputs, targets, stats = build_dataset(x, recs[name], eb,
+                                                       aux, fcfg)
 
-        key = jax.random.PRNGKey(tcfg.seed)
-        params = skipping_dnn.init_params(key, net_cfg)
-        tt = time.time()
-        params, _, history = online_trainer.train(params, inputs, targets,
-                                                  tcfg, net_cfg)
-        train_time += time.time() - tt
+                key = jax.random.PRNGKey(tcfg.seed)
+                params = skipping_dnn.init_params(key, net_cfg)
+                on_epoch, sampled = _sample_psnr_hook(
+                    tel, x, recs[name], inputs, eb, stats, fcfg, net_cfg)
+                tt = time.time()
+                params, _, history = online_trainer.train(
+                    params, inputs, targets, tcfg, net_cfg,
+                    on_epoch=on_epoch)
+                train_time += time.time() - tt
 
-        resid_norm = online_trainer.predict_residual(params, inputs, net_cfg)
-        entry = pack_entry(fcfg, conv_arcs[name], params, stats, aux_names,
-                           eb, net_cfg, history, collect_stats)
-        finalize_entry(entry, x, recs[name], resid_norm, eb, stats, fcfg)
-        out_fields[name] = entry
-        for m in (name, *aux_names):
-            rec_refs[m] -= 1
-            if rec_refs[m] <= 0:
-                recs.pop(m, None)
+                resid_norm = online_trainer.predict_residual(params, inputs,
+                                                             net_cfg)
+                entry = pack_entry(fcfg, conv_arcs[name], params, stats,
+                                   aux_names, eb, net_cfg, history,
+                                   collect_stats)
+                finalize_entry(entry, x, recs[name], resid_norm, eb, stats,
+                               fcfg)
+            if tel.enabled and tel.config.learning_traces:
+                obs_lib.learning_trace(
+                    tel, name, history, eb=eb, vrange=field_vrange(x),
+                    base_bytes=entry_base_bytes(entry), n_points=int(x.size),
+                    mode=fcfg.mode, sample_psnr=sampled)
+            out_fields[name] = entry
+            for m in (name, *aux_names):
+                rec_refs[m] -= 1
+                if rec_refs[m] <= 0:
+                    recs.pop(m, None)
 
-    timing = {"total_s": time.time() - t0, "conv_s": stage.stats.conv_s,
-              "train_s": train_time, "conv_stage": stage.stats.as_dict()}
-    return assemble_archive(fields, out_fields, config, timing)
+        timing = obs_lib.build_timing(
+            tel, total_s=time.time() - t0, conv_s=stage.stats.conv_s,
+            train_s=train_time, conv_stage=stage.stats.as_dict())
+        with tel.span("assemble"):
+            return assemble_archive(fields, out_fields, config, timing)
 
 
 def _apply_enhancement(rec, resid_norm, eb, out_dtype, stats, config) -> np.ndarray:

@@ -148,12 +148,15 @@ def predict_graph(params, xs, *, regulated: bool, skip: bool,
 
 def train(params, inputs: np.ndarray, targets: np.ndarray, cfg: TrainConfig,
           net_cfg: skipping_dnn.SkippingDNNConfig, opt_state=None,
-          start_epoch: int = 0, epochs: int | None = None):
+          start_epoch: int = 0, epochs: int | None = None, on_epoch=None):
     """Run ``epochs`` (default cfg.epochs) of online learning.
 
     Returns ``(params, opt_state, history)``; pass back ``opt_state`` and
     ``start_epoch`` to continue (the evolution benchmarks train one epoch at
-    a time to trace PSNR/OLR curves, paper Figs. 7/12/16).
+    a time to trace PSNR/OLR curves, paper Figs. 7/12/16).  ``on_epoch`` is
+    an optional host callback ``(epoch, params, loss)`` invoked after every
+    epoch (telemetry sample-PSNR hook); it forces a device sync per epoch,
+    so leave it ``None`` on performance-sensitive paths.
     """
     epochs = cfg.epochs if epochs is None else epochs
     if opt_state is None:
@@ -175,6 +178,8 @@ def train(params, inputs: np.ndarray, targets: np.ndarray, cfg: TrainConfig,
             steps=steps, total_steps=total_steps, base_lr=cfg.lr,
             min_lr_frac=cfg.min_lr_frac, loss=cfg.loss)
         history.append(float(mloss))
+        if on_epoch is not None:
+            on_epoch(e, params, history[-1])
     return params, opt_state, history
 
 

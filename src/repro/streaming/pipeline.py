@@ -48,6 +48,7 @@ from ..core import archive as arc_io
 from ..core import batched_engine, neurlz
 from ..core import bounds as bounds_lib
 from ..core import conv_stage as conv_stage_lib
+from ..obs import telemetry as obs_lib
 from . import source as source_lib
 from .writer import AsyncArchiveWriter, EntryTask
 
@@ -69,12 +70,14 @@ class ResidencyLedger:
     number reported by benchmarks and asserted by tests).
     """
 
-    def __init__(self, max_bytes: int = 0):
+    def __init__(self, max_bytes: int = 0, telemetry=None):
         self.max_bytes = int(max_bytes)
         self.current = 0
         self.peak = 0
         self._items: dict[str, int] = {}
         self._lock = threading.Lock()
+        self.tel = telemetry if telemetry is not None else obs_lib.NULL
+        self.tel.gauge("stream.resident_bytes_max").set(self.max_bytes)
 
     def __contains__(self, key: str) -> bool:
         return key in self._items
@@ -87,10 +90,15 @@ class ResidencyLedger:
             self.current += int(nbytes) - self._items.get(key, 0)
             self._items[key] = int(nbytes)
             self.peak = max(self.peak, self.current)
+        self.tel.gauge("stream.resident_bytes").set(self.current)
 
     def drop(self, key: str) -> None:
         with self._lock:
+            existed = key in self._items
             self.current -= self._items.pop(key, 0)
+        if existed:
+            self.tel.counter("stream.evictions").add()
+            self.tel.gauge("stream.resident_bytes").set(self.current)
 
 
 def order_groups(groups, aux_map, metas):
@@ -174,212 +182,240 @@ def compress(source, sink, rel_eb: float | None = None, *,
     """
     config = config or neurlz.NeurLZConfig(engine="streaming")
     stream = stream or StreamConfig()
+    tel = obs_lib.of(config)
     budget = (stream.max_resident_bytes
               if stream.max_resident_bytes is not None
               else config.max_resident_bytes)
     t0 = time.time()
+    with tel.span("compress", root=True, engine="streaming") as root_sp:
+        with tel.span("plan"):
+            src = source_lib.as_source(source)
+            names = src.names()
+            metas = {n: src.meta(n) for n in names}
+            resolved = None
+            if bounds is not None:
+                resolved = bounds_lib.resolve_bounds(
+                    names, bounds, rel_eb, abs_eb, default_mode=config.mode)
+            modes = ({n: b.mode for n, b in resolved.items()}
+                     if resolved is not None else None)
+            aux_map = {n: list(config.cross_field.get(n, ()))
+                       for n in names}
+            for n, aux in aux_map.items():
+                missing = [a for a in aux if a not in metas]
+                if missing:
+                    raise KeyError(
+                        f"cross-field aux {missing} not in input fields")
+            c_ins = {n: 1 + len(aux_map[n]) for n in names}
+            groups = batched_engine.plan_groups_from_meta(
+                {n: metas[n].shape for n in names}, c_ins, config,
+                modes=modes)
+            order = order_groups(groups, aux_map, metas)
+        root_sp.set(fields=len(names), groups=len(order))
 
-    src = source_lib.as_source(source)
-    names = src.names()
-    metas = {n: src.meta(n) for n in names}
-    resolved = None
-    if bounds is not None:
-        resolved = bounds_lib.resolve_bounds(names, bounds, rel_eb, abs_eb,
-                                             default_mode=config.mode)
-    modes = ({n: b.mode for n, b in resolved.items()}
-             if resolved is not None else None)
-    aux_map = {n: list(config.cross_field.get(n, ())) for n in names}
-    for n, aux in aux_map.items():
-        missing = [a for a in aux if a not in metas]
-        if missing:
-            raise KeyError(f"cross-field aux {missing} not in input fields")
-    c_ins = {n: 1 + len(aux_map[n]) for n in names}
-    groups = batched_engine.plan_groups_from_meta(
-        {n: metas[n].shape for n in names}, c_ins, config, modes=modes)
-    order = order_groups(groups, aux_map, metas)
+        rec_refs = {n: 1 for n in names}
+        for n in names:
+            for a in aux_map[n]:
+                rec_refs[a] += 1
 
-    rec_refs = {n: 1 for n in names}
-    for n in names:
-        for a in aux_map[n]:
-            rec_refs[a] += 1
+        tcfg = config.train_config()
+        ledger = ResidencyLedger(budget, telemetry=tel)
+        writer = AsyncArchiveWriter(sink, config,
+                                    collect_stats=collect_stats,
+                                    queue_size=stream.writer_queue,
+                                    telemetry=tel)
+        reader = ThreadPoolExecutor(max_workers=1,
+                                    thread_name_prefix="neurlz-reader")
+        xs: dict[str, np.ndarray] = {}
+        conv_arcs: dict[str, dict] = {}
+        recs: dict[str, np.ndarray] = {}
+        ebs: dict[str, float] = {}
+        in_flight: deque = deque()
+        # Shared conventional stage: a training group's freshly loaded
+        # fields compress as one batched plan under the existing residency
+        # ledger (the loaded originals and their reconstructions are
+        # already charged).
+        stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
+                                         batch=config.conv_batch,
+                                         bounds=resolved, telemetry=tel)
+        want_traces = tel.enabled and tel.config.learning_traces
 
-    tcfg = config.train_config()
-    ledger = ResidencyLedger(budget)
-    writer = AsyncArchiveWriter(sink, config, collect_stats=collect_stats,
-                                queue_size=stream.writer_queue)
-    reader = ThreadPoolExecutor(max_workers=1,
-                                thread_name_prefix="neurlz-reader")
-    xs: dict[str, np.ndarray] = {}
-    conv_arcs: dict[str, dict] = {}
-    recs: dict[str, np.ndarray] = {}
-    ebs: dict[str, float] = {}
-    in_flight: deque = deque()
-    # Shared conventional stage: a training group's freshly loaded fields
-    # compress as one batched plan under the existing residency ledger (the
-    # loaded originals and their reconstructions are already charged).
-    stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
-                                     batch=config.conv_batch, bounds=resolved)
+        def group_cost(group) -> dict[str, int]:
+            cost = {}
+            for n in group.names:
+                xb = metas[n].nbytes
+                cost[f"x:{n}"] = xb
+                if f"rec:{n}" not in ledger:
+                    cost[f"rec:{n}"] = xb
+                cost[f"ds:{n}"] = _dataset_nbytes(metas[n], group.c_in,
+                                                  config.slice_axis)
+            return cost
 
-    def group_cost(group) -> dict[str, int]:
-        cost = {}
-        for n in group.names:
-            xb = metas[n].nbytes
-            cost[f"x:{n}"] = xb
-            if f"rec:{n}" not in ledger:
-                cost[f"rec:{n}"] = xb
-            cost[f"ds:{n}"] = _dataset_nbytes(metas[n], group.c_in,
-                                              config.slice_axis)
-        return cost
+        def conv_many(arrays: Mapping[str, np.ndarray]) -> None:
+            if not arrays:
+                return
+            # The fused batched path materializes group-sized working
+            # copies (float64 casts, the stacked array, code/mask planes);
+            # charge an envelope for them so the fused dispatch respects
+            # the budget.  If it cannot fit even after retiring in-flight
+            # groups, fall back to per-field compression — one field's
+            # transients at a time, the historical (uncharged) envelope.
+            use_batch = len(arrays) > 1 and config.conv_batch
+            if use_batch:
+                tmp = 3 * sum(np.asarray(a).size * 8
+                              for a in arrays.values())
+                while not ledger.fits(tmp) and in_flight:
+                    retire(in_flight.popleft())
+                if ledger.fits(tmp):
+                    ledger.add("convtmp", tmp)
+                else:
+                    use_batch = False
+            try:
+                out = stage.run(arrays, batch=use_batch)
+            finally:
+                ledger.drop("convtmp")
+            for name, (arc, rec) in out.items():
+                conv_arcs[name], recs[name], ebs[name] = \
+                    arc, rec, arc["abs_eb"]
 
-    def conv_many(arrays: Mapping[str, np.ndarray]) -> None:
-        if not arrays:
-            return
-        # The fused batched path materializes group-sized working copies
-        # (float64 casts, the stacked array, code/mask planes); charge an
-        # envelope for them so the fused dispatch respects the budget.  If
-        # it cannot fit even after retiring in-flight groups, fall back to
-        # per-field compression — one field's transients at a time, the
-        # historical (uncharged) envelope.
-        use_batch = len(arrays) > 1 and config.conv_batch
-        if use_batch:
-            tmp = 3 * sum(np.asarray(a).size * 8 for a in arrays.values())
-            while not ledger.fits(tmp) and in_flight:
+        def unref_rec(name: str) -> None:
+            rec_refs[name] -= 1
+            if rec_refs[name] <= 0:
+                recs.pop(name, None)
+                ledger.drop(f"rec:{name}")
+
+        def retire(state) -> None:
+            """Sync the oldest group, hand entries to the writer, evict."""
+            gcfg = batched_engine.group_config(config, state.group)
+            with tel.span("retire", group=",".join(state.group.names)):
+                for f, name, hist, resid in \
+                        batched_engine.group_results(state):
+                    x = np.asarray(xs[name])
+                    _, mask = neurlz.enhance_and_mask(
+                        x, recs[name], resid, ebs[name], state.stats[f],
+                        gcfg)
+                    trace = ((neurlz.field_vrange(x), int(x.size))
+                             if want_traces else None)
+                    writer.put(EntryTask(
+                        name=name, conv_arc=conv_arcs.pop(name),
+                        params=state.params[f], stats=state.stats[f],
+                        aux=aux_map[name], eb=ebs[name],
+                        net_cfg=state.net_cfg, history=hist, mask=mask,
+                        mode=state.group.mode, trace=trace))
+                    xs.pop(name, None)
+                    ledger.drop(f"x:{name}")
+                    ledger.drop(f"ds:{name}")
+                    unref_rec(name)
+                    for a in aux_map[name]:
+                        unref_rec(a)
+
+        def admit(cost: dict[str, int], what: str) -> None:
+            need = sum(cost.values())
+            while not ledger.fits(need) and in_flight:
                 retire(in_flight.popleft())
-            if ledger.fits(tmp):
-                ledger.add("convtmp", tmp)
-            else:
-                use_batch = False
+            if not ledger.fits(need):
+                live = sorted(k for k in ledger._items)
+                raise MemoryError(
+                    f"max_resident_bytes={budget} cannot admit {what} "
+                    f"(needs {need} more bytes over {ledger.current} "
+                    f"resident: {live}); raise the budget, lower "
+                    f"group_size, or wrap the source in BlockedSource")
+            for k, v in cost.items():
+                ledger.add(k, v)
+
+        def ensure_aux_rec(name: str) -> None:
+            """Conv-compress an aux producer early (transient load)."""
+            if name in recs:
+                return
+            cost = {f"rec:{name}": metas[name].nbytes,
+                    f"tmpx:{name}": metas[name].nbytes}
+            admit(cost, f"aux reconstruction of {name!r}")
+            conv_many({name: src.load(name)})
+            ledger.drop(f"tmpx:{name}")
+
+        def prefetch_load(group):
+            # Runs on the reader thread: its "read" span has no enclosing
+            # span there, so it parents to the run's root span.
+            with tel.span("read", group=",".join(group.names)):
+                return {n: src.load(n) for n in group.names}
+
+        prefetched = None           # (group, future, cost) for order[i+1]
+        t_train0 = time.time()
+        conv_before = stage.stats.conv_s
         try:
-            out = stage.run(arrays, batch=use_batch)
-        finally:
-            ledger.drop("convtmp")
-        for name, (arc, rec) in out.items():
-            conv_arcs[name], recs[name], ebs[name] = arc, rec, arc["abs_eb"]
-
-    def unref_rec(name: str) -> None:
-        rec_refs[name] -= 1
-        if rec_refs[name] <= 0:
-            recs.pop(name, None)
-            ledger.drop(f"rec:{name}")
-
-    def retire(state) -> None:
-        """Sync the oldest group, hand entries to the writer, evict."""
-        gcfg = batched_engine.group_config(config, state.group)
-        for f, name, hist, resid in batched_engine.group_results(state):
-            x = np.asarray(xs[name])
-            _, mask = neurlz.enhance_and_mask(x, recs[name], resid,
-                                              ebs[name], state.stats[f],
-                                              gcfg)
-            writer.put(EntryTask(
-                name=name, conv_arc=conv_arcs.pop(name),
-                params=state.params[f], stats=state.stats[f],
-                aux=aux_map[name], eb=ebs[name], net_cfg=state.net_cfg,
-                history=hist, mask=mask, mode=state.group.mode))
-            xs.pop(name, None)
-            ledger.drop(f"x:{name}")
-            ledger.drop(f"ds:{name}")
-            unref_rec(name)
-            for a in aux_map[name]:
-                unref_rec(a)
-
-    def admit(cost: dict[str, int], what: str) -> None:
-        need = sum(cost.values())
-        while not ledger.fits(need) and in_flight:
-            retire(in_flight.popleft())
-        if not ledger.fits(need):
-            live = sorted(k for k in ledger._items)
-            raise MemoryError(
-                f"max_resident_bytes={budget} cannot admit {what} "
-                f"(needs {need} more bytes over {ledger.current} resident: "
-                f"{live}); raise the budget, lower group_size, or wrap the "
-                f"source in BlockedSource")
-        for k, v in cost.items():
-            ledger.add(k, v)
-
-    def ensure_aux_rec(name: str) -> None:
-        """Conv-compress an aux producer early (transient original load)."""
-        if name in recs:
-            return
-        cost = {f"rec:{name}": metas[name].nbytes,
-                f"tmpx:{name}": metas[name].nbytes}
-        admit(cost, f"aux reconstruction of {name!r}")
-        conv_many({name: src.load(name)})
-        ledger.drop(f"tmpx:{name}")
-
-    prefetched = None           # (group, future, cost) for order[i+1]
-    t_train0 = time.time()
-    conv_before = stage.stats.conv_s
-    try:
-        for gi, group in enumerate(order):
-            if prefetched is not None and prefetched[0] is group:
-                arrays = prefetched[1].result()
-            else:
-                admit(group_cost(group), f"group {group.names}")
-                arrays = {n: src.load(n) for n in group.names}
-            prefetched = None
-            xs.update(arrays)
-            # Conv-compress the group's own fields first (fused, from the
-            # already-loaded arrays) so an in-group aux producer never takes
-            # the transient-reload path below.
-            conv_many({n: xs[n] for n in group.names if n not in recs})
-            for name in group.names:
-                for a in aux_map[name]:
-                    ensure_aux_rec(a)
-            state = batched_engine._prepare_group(
-                group, _SnapshotView({n: xs[n] for n in group.names}, names),
-                recs, ebs, config, tcfg)
-            batched_engine._dispatch_group(state, config, tcfg)  # async
-            in_flight.append(state)
-            # Retire down to depth BEFORE prefetching: steady-state
-            # residency is then depth working sets, so a budget of ~2 group
-            # working sets still gets reader-thread lookahead.
-            while len(in_flight) > max(1, stream.depth) - 1:
+            for gi, group in enumerate(order):
+                if prefetched is not None and prefetched[0] is group:
+                    arrays = prefetched[1].result()
+                else:
+                    admit(group_cost(group), f"group {group.names}")
+                    with tel.span("load", group=",".join(group.names)):
+                        arrays = {n: src.load(n) for n in group.names}
+                prefetched = None
+                xs.update(arrays)
+                # Conv-compress the group's own fields first (fused, from
+                # the already-loaded arrays) so an in-group aux producer
+                # never takes the transient-reload path below.
+                conv_many({n: xs[n] for n in group.names if n not in recs})
+                for name in group.names:
+                    for a in aux_map[name]:
+                        ensure_aux_rec(a)
+                with tel.span("train", group=",".join(group.names)):
+                    state = batched_engine._prepare_group(
+                        group,
+                        _SnapshotView({n: xs[n] for n in group.names},
+                                      names),
+                        recs, ebs, config, tcfg)
+                    batched_engine._dispatch_group(state, config, tcfg)
+                in_flight.append(state)
+                # Retire down to depth BEFORE prefetching: steady-state
+                # residency is then depth working sets, so a budget of ~2
+                # group working sets still gets reader-thread lookahead.
+                while len(in_flight) > max(1, stream.depth) - 1:
+                    retire(in_flight.popleft())
+                # Reader-thread lookahead: load the next group's originals
+                # while this group trains on device (skipped, not blocked,
+                # when the budget cannot take both working sets at once).
+                if gi + 1 < len(order) and stream.prefetch:
+                    nxt = order[gi + 1]
+                    cost = group_cost(nxt)
+                    if ledger.fits(sum(cost.values())):
+                        for k, v in cost.items():
+                            ledger.add(k, v)
+                        fut = reader.submit(prefetch_load, nxt)
+                        prefetched = (nxt, fut, cost)
+            while in_flight:
                 retire(in_flight.popleft())
-            # Reader-thread lookahead: load the next group's originals while
-            # this group trains on device (skipped, not blocked, when the
-            # budget cannot take both working sets at once).
-            if gi + 1 < len(order) and stream.prefetch:
-                nxt = order[gi + 1]
-                cost = group_cost(nxt)
-                if ledger.fits(sum(cost.values())):
-                    for k, v in cost.items():
-                        ledger.add(k, v)
-                    fut = reader.submit(
-                        lambda g=nxt: {n: src.load(n) for n in g.names})
-                    prefetched = (nxt, fut, cost)
-        while in_flight:
-            retire(in_flight.popleft())
-        train_time = (time.time() - t_train0) \
-            - (stage.stats.conv_s - conv_before)
+            train_time = (time.time() - t_train0) \
+                - (stage.stats.conv_s - conv_before)
 
-        timing = {
-            "total_s": time.time() - t0,
-            "conv_s": stage.stats.conv_s,
-            "train_s": train_time,
-            "peak_resident_bytes": ledger.peak,
-            "max_resident_bytes": budget,
-            "conv_stage": stage.stats.as_dict(),
-        }
-        meta = {
-            "field_order": names,
-            "shapes": {n: list(metas[n].shape) for n in names},
-            "slice_axis": config.slice_axis,
-            "compressor": config.compressor,
-            "aux": aux_map,
-            "blocks": dict(getattr(src, "manifest", {}) or {}),
-            "timing": timing,
-        }
-        stats = writer.close(meta)
-        timing["total_s"] = time.time() - t0
-        return {**timing, **stats, "field_order": names,
-                "groups": len(order)}
-    except BaseException:
-        writer.abort()
-        raise
-    finally:
-        if prefetched is not None:
-            prefetched[1].cancel()
-        reader.shutdown(wait=True)
+            timing = obs_lib.build_timing(
+                tel, total_s=time.time() - t0, conv_s=stage.stats.conv_s,
+                train_s=train_time, conv_stage=stage.stats.as_dict(),
+                peak_resident_bytes=ledger.peak,
+                max_resident_bytes=budget)
+            meta = {
+                "field_order": names,
+                "shapes": {n: list(metas[n].shape) for n in names},
+                "slice_axis": config.slice_axis,
+                "compressor": config.compressor,
+                "aux": aux_map,
+                "blocks": dict(getattr(src, "manifest", {}) or {}),
+                "timing": timing,
+            }
+            with tel.span("flush"):
+                stats = writer.close(meta)
+            timing["total_s"] = time.time() - t0
+            if tel.enabled:
+                # Refresh: the writer thread's spans land during close().
+                timing["spans"] = tel.span_summary()
+            return {**timing, **stats, "field_order": names,
+                    "groups": len(order)}
+        except BaseException:
+            writer.abort()
+            raise
+        finally:
+            if prefetched is not None:
+                prefetched[1].cancel()
+            reader.shutdown(wait=True)
 
 
 class PipelineScheduler:
@@ -420,7 +456,8 @@ def compress_dict(fields, rel_eb: float | None = None, *,
     arc["timing"] = {**arc["timing"],
                      **{k: report[k] for k in
                         ("writer_busy_s", "writer_put_wait_s",
-                         "writer_close_wait_s", "bytes_written", "entries")
+                         "writer_close_wait_s", "bytes_written", "entries",
+                         "spans")
                         if k in report}}
     return arc
 

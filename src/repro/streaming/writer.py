@@ -27,6 +27,7 @@ import numpy as np
 from ..compressors import outliers as outlier_codec
 from ..core import archive as arc_io
 from ..core import neurlz
+from ..obs import telemetry as obs_lib
 
 
 @dataclasses.dataclass
@@ -44,6 +45,9 @@ class EntryTask:
     mode: str | None = None     # per-field regulation-mode override
     #   (None -> the writer config's mode; set by mixed-bound runs so the
     #   packed entry records the mode the field actually honored)
+    trace: tuple | None = None  # (vrange, n_points) when telemetry learning
+    #   traces are on: the writer records the trajectory after packing, when
+    #   the entry's actual base bytes are known
 
 
 class AsyncArchiveWriter:
@@ -58,10 +62,11 @@ class AsyncArchiveWriter:
     _STOP = object()
 
     def __init__(self, sink, config, *, collect_stats: bool = True,
-                 queue_size: int = 4):
+                 queue_size: int = 4, telemetry=None):
         self._appender = arc_io.ArchiveAppender(sink)
         self._config = config
         self._collect_stats = collect_stats
+        self.tel = telemetry if telemetry is not None else obs_lib.NULL
         self._q: queue.Queue = queue.Queue(maxsize=max(1, queue_size))
         self._error: BaseException | None = None
         self.busy_s = 0.0
@@ -81,15 +86,24 @@ class AsyncArchiveWriter:
                 if self._error is not None:
                     continue        # drain after failure
                 t0 = time.time()
-                cfg = neurlz.field_config(self._config, task.mode)
-                entry = neurlz.pack_entry(
-                    cfg, task.conv_arc, task.params, task.stats,
-                    task.aux, task.eb, task.net_cfg, task.history,
-                    self._collect_stats)
-                if task.mask is not None:
-                    entry["outliers"] = outlier_codec.encode_outliers(
-                        task.mask)
-                self._appender.add_entry(task.name, entry)
+                with self.tel.span("write", field=task.name):
+                    cfg = neurlz.field_config(self._config, task.mode)
+                    entry = neurlz.pack_entry(
+                        cfg, task.conv_arc, task.params, task.stats,
+                        task.aux, task.eb, task.net_cfg, task.history,
+                        self._collect_stats)
+                    if task.mask is not None:
+                        entry["outliers"] = outlier_codec.encode_outliers(
+                            task.mask)
+                    self._appender.add_entry(task.name, entry)
+                    if task.trace is not None:
+                        obs_lib.learning_trace(
+                            self.tel, task.name, task.history, eb=task.eb,
+                            vrange=task.trace[0],
+                            base_bytes=neurlz.entry_base_bytes(entry),
+                            n_points=task.trace[1], mode=cfg.mode)
+                self.tel.counter("writer.entries").add()
+                self.tel.gauge("writer.queue_depth").set(self._q.qsize())
                 self.busy_s += time.time() - t0
                 self.entries += 1
             except BaseException as exc:  # noqa: BLE001 - reported to caller
@@ -107,8 +121,11 @@ class AsyncArchiveWriter:
         blocked time is writer work stalling compute, counted as
         non-overlapped in the stats."""
         self._check()
+        if self._q.full():
+            self.tel.counter("writer.backpressure_stalls").add()
         t0 = time.time()
         self._q.put(task)
+        self.tel.gauge("writer.queue_depth").set(self._q.qsize())
         self.put_wait_s += time.time() - t0
 
     def close(self, meta: dict) -> dict:

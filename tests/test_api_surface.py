@@ -19,7 +19,7 @@ def test_repro_all_snapshot():
     assert sorted(repro.__all__) == sorted([
         "NeurLZ", "Archive", "ErrorBound",
         "ModelConfig", "EngineConfig", "RegulationConfig",
-        "NeurLZConfig", "open",
+        "NeurLZConfig", "Telemetry", "TelemetryConfig", "open",
     ])
     for name in repro.__all__:
         assert getattr(repro, name) is not None
@@ -63,7 +63,8 @@ SIGNATURES = {
         " skip=True, learn_residual=True, cross_field={}, "
         "weight_dtype='float32', widths=(4, 4, 6, 6, 8), engine='serial', "
         "conv_batch=True, field_batching='unroll', group_size=2, "
-        "prefetch=True, field_shard=True, max_resident_bytes=0), "
+        "prefetch=True, field_shard=True, max_resident_bytes=0, "
+        "telemetry=None), "
         "collect_stats: 'bool' = True, bounds=None) -> 'dict'",
     "core.decompress":
         "(arc, *, engine: 'str' = 'serial') -> 'dict[str, np.ndarray]'",

@@ -1,0 +1,120 @@
+"""core/metrics edge cases + the zero-overhead telemetry disabled path.
+
+Covers the degenerate inputs production snapshots actually contain —
+constant fields (``vrange == 0``), fully non-finite fields — plus the
+"disabled telemetry allocates nothing" contract: every no-op span/counter/
+gauge handed out by :data:`repro.obs.NULL` is a shared singleton.
+"""
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import metrics
+
+
+# ---------------------------------------------------------------------------
+# Constant field: vrange == 0 branch
+# ---------------------------------------------------------------------------
+
+def test_psnr_constant_field_uses_abs_value_range():
+    o = np.full((4, 8, 8), 3.25, dtype=np.float32)
+    r = o + np.float32(1e-3)
+    p = metrics.psnr(o, r)
+    assert np.isfinite(p)
+    # vrange falls back to max(|3.25|, 1) = 3.25, mse = 1e-6
+    assert p == pytest.approx(20 * np.log10(3.25) - 10 * np.log10(1e-6),
+                              rel=1e-3)
+
+
+def test_psnr_constant_zero_field_clamps_range_to_one():
+    o = np.zeros((4, 8, 8), dtype=np.float32)
+    p = metrics.psnr(o, o + np.float32(0.01))
+    # vrange clamps to 1.0, so PSNR = -10·log10(1e-4) = 40 dB
+    assert p == pytest.approx(40.0, rel=1e-3)
+
+
+def test_psnr_exact_reconstruction_is_infinite():
+    o = np.full((8, 8), 7.0)
+    assert metrics.psnr(o, o.copy()) == float("inf")
+
+
+def test_nrmse_constant_field_does_not_divide_by_zero():
+    o = np.full((8, 8), 2.0)
+    v = metrics.nrmse(o, o + 0.5)
+    assert np.isfinite(v)
+
+
+# ---------------------------------------------------------------------------
+# All-NaN / non-finite fields
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fn", [metrics.psnr, metrics.mae, metrics.nrmse])
+def test_all_nan_field_returns_nan_not_crash(fn):
+    o = np.full((4, 8, 8), np.nan, dtype=np.float32)
+    r = np.zeros_like(o)
+    assert np.isnan(fn(o, r))
+
+
+@pytest.mark.parametrize("fn", [metrics.psnr, metrics.mae, metrics.nrmse])
+def test_all_inf_field_returns_nan(fn):
+    o = np.full((8, 8), np.inf)
+    assert np.isnan(fn(o, np.zeros_like(o)))
+
+
+def test_partial_nan_field_scores_finite_subset():
+    rng = np.random.default_rng(0)
+    o = rng.normal(size=(4, 8, 8))
+    o[0] = np.nan
+    r = o + 1e-4
+    p = metrics.psnr(o, r)
+    assert np.isfinite(p)
+    # identical to scoring the finite subset directly
+    assert p == pytest.approx(metrics.psnr(o[1:], r[1:]), rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry disabled path: shared no-op singletons, no per-call allocations
+# ---------------------------------------------------------------------------
+
+def test_null_telemetry_hands_out_shared_singletons():
+    null = obs.NULL
+    assert isinstance(null, obs.NullTelemetry)
+    assert null.span("a") is null.span("b", field="x")
+    assert null.counter("a") is null.counter("b")
+    assert null.gauge("a") is null.gauge("b")
+    # the no-op span context manager is itself the shared instance
+    with null.span("work", n=1) as sp:
+        assert sp is null.span("other")
+        assert sp.set(more=2) is sp
+    assert null.counter("c").add(5) is None
+    assert null.gauge("g").set(1.0) is None
+    assert null.spans == [] and null.counters == {} and null.traces == {}
+    assert not null.enabled
+
+
+def test_disabled_path_allocates_nothing_measurable():
+    null = obs.NULL
+
+    def hot_loop(n):
+        for i in range(n):
+            with null.span("step"):
+                null.counter("hits").add()
+                null.gauge("depth").set(i)
+
+    hot_loop(10)                      # warm up any lazy caches
+    tracemalloc.start()
+    before = tracemalloc.take_snapshot()
+    hot_loop(5000)
+    after = tracemalloc.take_snapshot()
+    tracemalloc.stop()
+    net = sum(st.size_diff for st in after.compare_to(before, "filename")
+              if "telemetry" in st.traceback[0].filename)
+    # shared singletons: the loop itself must not grow telemetry-owned memory
+    assert net <= 512, f"disabled telemetry leaked {net} bytes over 5k spans"
+
+
+def test_null_telemetry_is_default_for_plain_config():
+    from repro.core import neurlz
+    assert obs.of(neurlz.NeurLZConfig()) is obs.NULL
