@@ -1,0 +1,105 @@
+"""Durability rows: NLZSTRM2 checksummed container cost vs NLZSTRM1.
+
+Three rows:
+
+* ``durability/stream_overhead`` — the same snapshot stream-compressed
+  into a v1 (no checksums) and a v2 (sync markers + crc32 per record)
+  container on disk, best-of-N wall-clock after a jit warmup.  The smoke
+  profile **fails** when the v2 run exceeds v1 by more than 5% (plus a
+  small absolute slack) — crash-safety must be noise against the real
+  write path (training + codec dominate; the checksum is metadata).
+* ``durability/append_overhead`` — the container layer alone (raw entry
+  appends, no compression): the honest microcost of crc32 + record
+  framing per byte, reported but not gated (page-cache-speed appends
+  make any checksum look expensive; no real run is append-bound).
+* ``durability/salvage_scan`` — full salvage scan
+  (:func:`scan_container`) of a torn copy of the v2 container: the
+  recovery cost a crashed run pays once at resume time.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from . import common
+from repro import core
+from repro.core import archive as A
+from repro.streaming import pipeline
+
+# v2-vs-v1 end-to-end guard: relative bound plus absolute slack so one
+# scheduler hiccup on a ~1 s run cannot flake CI.
+OVERHEAD_REL = 0.05
+OVERHEAD_ABS_S = 0.1
+
+
+def _stream_time(fields, path: str, version: int, cfg, reps: int) -> float:
+    stream = pipeline.StreamConfig(container_version=version)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        pipeline.compress(fields, path, 1e-3, config=cfg, stream=stream)
+        best = min(best, time.time() - t0)
+    return best
+
+
+def _append_time(path: str, entries, version: int) -> float:
+    t0 = time.time()
+    app = A.ArchiveAppender(path, version=version)
+    for name, entry in entries:
+        app.add_entry(name, entry)
+    app.finalize({"field_order": [n for n, _ in entries]})
+    return time.time() - t0
+
+
+def run(full: bool = False, smoke: bool = False) -> None:
+    shape = (16, 32, 32) if full else (8, 16, 16)
+    epochs = 4 if full else 2
+    reps = 3
+    fields = common.snapshot_fields(3, shape=shape)
+    cfg = core.NeurLZConfig(engine="streaming", epochs=epochs)
+    with tempfile.TemporaryDirectory() as d:
+        p1, p2 = os.path.join(d, "v1.nlz"), os.path.join(d, "v2.nlz")
+        _stream_time(fields, p2, 2, cfg, 1)          # jit warmup
+        t1 = _stream_time(fields, p1, 1, cfg, reps)
+        t2 = _stream_time(fields, p2, 2, cfg, reps)
+        overhead = (t2 - t1) / t1
+        ok = t2 <= t1 * (1.0 + OVERHEAD_REL) + OVERHEAD_ABS_S
+        common.csv_row(
+            "durability/stream_overhead", t2 * 1e6,
+            f"v1_us={t1 * 1e6:.1f};overhead_pct={overhead * 100:.2f};"
+            f"within_bound={ok}")
+        if smoke and not ok:
+            raise AssertionError(
+                f"v2 checksummed stream-compress {t2:.3f}s exceeds v1 "
+                f"{t1:.3f}s by more than {OVERHEAD_REL:.0%} "
+                f"(+{OVERHEAD_ABS_S}s slack)")
+
+        # container layer alone (informational: no real run is append-bound)
+        n, payload = (64, 1 << 20) if full else (32, 1 << 18)
+        rng = np.random.default_rng(0)
+        entries = [(f"f{i}", {"conv": {"blob": rng.bytes(payload)}})
+                   for i in range(n)]
+        a1 = min(_append_time(p1, entries, 1) for _ in range(3))
+        a2 = min(_append_time(p2, entries, 2) for _ in range(3))
+        mb = n * payload / 1e6
+        common.csv_row(
+            "durability/append_overhead", a2 * 1e6,
+            f"v1_us={a1 * 1e6:.1f};"
+            f"overhead_pct={(a2 - a1) / a1 * 100:.2f};"
+            f"mb_per_s={mb / a2:.0f};payload_mb={mb:.1f}")
+
+        data = open(p2, "rb").read()
+        torn = os.path.join(d, "torn.nlz")
+        open(torn, "wb").write(data[: int(len(data) * 0.7)])
+        t0 = time.time()
+        scan = A.scan_container(torn)
+        t_scan = time.time() - t0
+        common.csv_row(
+            "durability/salvage_scan", t_scan * 1e6,
+            f"entries={len(scan['entries'])};of={n};"
+            f"mb_scanned={len(data) * 0.7 / 1e6:.2f};"
+            f"sealed={scan['sealed']}")
+        assert not scan["sealed"] and scan["entries"]

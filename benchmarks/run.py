@@ -28,6 +28,7 @@ MODULES = [
     "bench_roofline",           # §Roofline table from dry-run records
     "bench_streaming",          # bounded-memory pipeline vs in-memory engine
     "bench_obs",                # telemetry overhead guard + Perfetto trace
+    "bench_durability",         # NLZSTRM2 checksum cost + salvage scan
 ]
 
 
@@ -39,12 +40,13 @@ MODULES_SMOKE = [
     "bench_scalability",
     "bench_streaming",
     "bench_obs",
+    "bench_durability",
 ]
 
 # Committed perf ledger (repo root): the smoke profile's machine-readable
 # run record; scripts/perf_summary.py --compare diffs two of these and
 # fails on >25% wall-clock regression.
-LEDGER = "BENCH_PR7.json"
+LEDGER = "BENCH_PR8.json"
 
 
 def main() -> None:

@@ -89,6 +89,13 @@ def main():
                     help="record telemetry and write a Chrome/Perfetto "
                          "trace_event JSON here (load it at ui.perfetto.dev);"
                          " PATH.jsonl gets the line-per-event log")
+    ap.add_argument("--resume", action="store_true",
+                    help="streaming engine: salvage a partial container at "
+                         "--out left by a killed run (same config) and "
+                         "compress only the remaining fields")
+    ap.add_argument("--verify", action="store_true",
+                    help="after compressing, re-read every entry through "
+                         "the checksum path and report per-entry status")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -120,21 +127,38 @@ def main():
         tempfile.gettempdir(),
         f"{args.dataset}.nlzs" if args.engine == "streaming"
         else f"{args.dataset}.nlz")
+    if args.resume and args.engine != "streaming":
+        ap.error("--resume requires --engine streaming (the incremental "
+                 "container is what a killed run leaves behind)")
     if args.engine == "streaming":
         # Full out-of-core path: incremental container straight to disk,
         # reopened as a *lazy* Archive handle (no field materializes until
         # decoded).
         arc = sess.compress_to(flds, path, bounds=bounds or None,
-                               rel_eb=args.eb)
+                               rel_eb=args.eb, resume=args.resume)
         report = arc.report
         nbytes = report["bytes_written"]
+        if args.resume:
+            done = report["resumed_fields"]
+            print(f"[resume]   salvaged {len(done)} field"
+                  f"{'s' if len(done) != 1 else ''} from the partial "
+                  f"container" + (f": {', '.join(done)}" if done else ""))
         print(f"[resident] pipeline peak {report['peak_resident_bytes']/2**20:.2f} MiB"
               + (f" (budget {args.max_resident_mb:.2f} MiB)"
                  if args.max_resident_mb else " (no ceiling)")
               + f", writer busy {report['writer_busy_s']:.2f}s")
+        if report["degraded_fields"]:
+            print(f"[degraded] conv-only fallback (bound still honored): "
+                  f"{', '.join(report['degraded_fields'])}")
     else:
         arc = sess.compress(flds, bounds=bounds or None, rel_eb=args.eb)
         nbytes = arc.save(path)
+    if args.verify:
+        rep = arc.verify()
+        bad = {n: e for n, e in rep["entries"].items() if not e["ok"]}
+        print(f"[verify]   {len(rep['entries'])} entries checksum-verified: "
+              + ("all ok" if rep["ok"] else f"{len(bad)} FAILED {bad}"))
+        assert rep["ok"], "container verification failed"
     cs = arc["timing"].get("conv_stage")
     if cs:
         print(f"[conv]     {cs['fields']} fields -> {cs['groups']} groups, "

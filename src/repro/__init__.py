@@ -27,13 +27,19 @@ cheap and does not flip the x64 switch; touching any of these loads
     Telemetry / TelemetryConfig
                               observability handle (``repro.obs``; spans,
                               counters, per-field learning traces)
+    FaultConfig / FaultInjector / RetryPolicy / InjectedFault
+                              fault-tolerance knobs (``repro.faults``;
+                              injection, retry + backoff, degradation)
+    CorruptArchiveError       typed container-corruption error (with the
+                              failing byte offset)
     open(path)                Archive.open convenience
 """
 __version__ = "1.0.0"
 
 __all__ = ["NeurLZ", "Archive", "ErrorBound", "ModelConfig", "EngineConfig",
            "RegulationConfig", "NeurLZConfig", "Telemetry", "TelemetryConfig",
-           "open"]
+           "FaultConfig", "FaultInjector", "InjectedFault", "RetryPolicy",
+           "CorruptArchiveError", "open"]
 
 _API = frozenset(__all__)   # every lazy attribute resolves via repro.api
 

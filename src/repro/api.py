@@ -31,9 +31,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping
 
+from . import faults as faults_lib
 from .core import bounds as bounds_lib
 from .core import neurlz
+from .core.archive import CorruptArchiveError
 from .core.archive_api import Archive
+from .faults import FaultConfig, FaultInjector, InjectedFault, RetryPolicy
 from .core.bounds import ErrorBound
 from .core.neurlz import NeurLZConfig
 from .obs import telemetry as obs
@@ -70,6 +73,8 @@ class EngineConfig:
     max_resident_bytes: int = 0         # streaming residency budget (0=off)
     telemetry: object | None = None     # repro.obs.Telemetry handle (None =
     #   disabled; instrumentation degrades to shared no-op singletons)
+    faults: object | None = None        # repro.faults.FaultConfig (None =
+    #   defaults: no injection, no retries, degradation on)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,12 +192,15 @@ class NeurLZ:
         handle = Archive.from_dict(arc)
         if self.engine.telemetry is not None:
             handle.telemetry = self.engine.telemetry
+        if self.engine.faults is not None:
+            handle.faults = self.engine.faults
         return handle
 
     def compress_to(self, source, sink, bounds=None, *,
                     rel_eb: float | None = None,
                     abs_eb: float | None = None,
-                    collect_stats: bool = True) -> Archive:
+                    collect_stats: bool = True,
+                    resume: bool = False) -> Archive:
         """Stream-compress ``source`` into ``sink`` (out-of-core path).
 
         ``source`` is anything :func:`repro.streaming.source.as_source`
@@ -200,6 +208,13 @@ class NeurLZ:
         memory streaming pipeline regardless of ``engine.engine`` and
         returns a **lazy** :class:`Archive` over the written container,
         with the pipeline report attached as ``archive.report``.
+
+        ``resume=True``: if ``sink`` holds a partial container from an
+        interrupted run of the *same* configuration, salvage its sealed
+        entries and compress only the remaining fields — the finished
+        container is byte-identical per entry to an uninterrupted run.  A
+        config mismatch is a hard error (silently resuming under different
+        settings would break the determinism contract).
         """
         from .streaming import pipeline
         cfg = self.config
@@ -207,11 +222,13 @@ class NeurLZ:
             cfg = dataclasses.replace(cfg, engine="streaming")
         report = pipeline.compress(source, sink, rel_eb, abs_eb=abs_eb,
                                    config=cfg, collect_stats=collect_stats,
-                                   bounds=bounds)
+                                   bounds=bounds, resume=resume)
         arc = Archive.open(sink)
         arc.report = report
         if self.engine.telemetry is not None:
             arc.telemetry = self.engine.telemetry
+        if self.engine.faults is not None:
+            arc.faults = self.engine.faults
         return arc
 
     # -- decode -------------------------------------------------------------
@@ -224,6 +241,9 @@ class NeurLZ:
         if (self.engine.telemetry is not None
                 and arc.telemetry is obs.NULL):
             arc.telemetry = self.engine.telemetry
+        if (self.engine.faults is not None
+                and arc.faults is faults_lib.DEFAULT):
+            arc.faults = self.engine.faults
         engine = "batched" if self.engine.engine == "batched" else "serial"
         return arc.decode_all(engine=engine, reassemble=reassemble)
 
@@ -241,7 +261,8 @@ def open(path) -> Archive:  # noqa: A001 - deliberate, repro.open(path)
 
 __all__ = ["NeurLZ", "Archive", "ErrorBound", "ModelConfig", "EngineConfig",
            "RegulationConfig", "NeurLZConfig", "Telemetry", "TelemetryConfig",
-           "join_config", "split_config", "open"]
+           "FaultConfig", "FaultInjector", "InjectedFault", "RetryPolicy",
+           "CorruptArchiveError", "join_config", "split_config", "open"]
 
 # Re-exported for API-surface completeness (resolve_bounds powers the
 # ``bounds=`` argument coercion rules documented above).

@@ -5,26 +5,46 @@ Layout per field: conventional compressed payload ‖ enhancer weights
 normalization stats + header.  msgpack binary container, numpy arrays as
 typed blobs.  ``nbytes`` accounting matches what lands on disk.
 
-Two container formats, versioned side by side:
+Three container formats, versioned side by side:
 
 * **whole-dict** (original) — one msgpack blob for the entire archive dict
   (:func:`save` / :func:`load`).
-* **streaming v1** — an append-able record container written incrementally
-  by the streaming pipeline (:class:`ArchiveAppender`): an 8-byte magic,
-  then length-prefixed msgpack records (one per field entry, in completion
-  order), then an index footer record mapping field name → (offset, length)
-  plus snapshot metadata, the footer's own offset, and the magic again as a
-  trailer.  :class:`ArchiveReader` seeks the footer and decodes one field
-  at a time, so a decoder never has to hold the whole archive in memory.
-  Field *entries* are byte-identical to the whole-dict format's — only the
-  container differs — and :func:`repro.core.load` sniffs the magic so both
-  formats load through the same call.
+* **streaming v1** (``NLZSTRM1``) — an append-able record container written
+  incrementally by the streaming pipeline (:class:`ArchiveAppender`): an
+  8-byte magic, then length-prefixed msgpack records (one per field entry,
+  in completion order), then an index footer record mapping field name →
+  (offset, length) plus snapshot metadata, the footer's own offset, and the
+  magic again as a trailer.  :class:`ArchiveReader` seeks the footer and
+  decodes one field at a time, so a decoder never has to hold the whole
+  archive in memory.  Field *entries* are byte-identical to the whole-dict
+  format's — only the container differs — and :func:`repro.core.load`
+  sniffs the magic so both formats load through the same call.
+* **streaming v2** (``NLZSTRM2``, default) — the durable container.  Same
+  record/footer/trailer topology as v1, but every record is
+  *self-delimiting*: an 8-byte sync marker, a one-byte checksum-algorithm
+  flag, the payload length, and a per-record checksum (CRC-32 via zlib by
+  default; CRC-32C when the optional ``crc32c`` wheel is installed and
+  requested) precede the msgpack payload.  An optional **prelude** record
+  right after the magic carries the snapshot's static metadata (field
+  order, shapes, compressor, aux map), so a container whose footer was
+  never written — a crashed run — still knows what it holds.  The
+  recovery scanner (:func:`scan_container` / ``ArchiveReader(...,
+  repair=True)``) walks a footerless or truncated container record by
+  record, resynchronizing on the sync marker past torn or corrupt bytes,
+  and salvages every checksum-intact entry; :func:`verify_container`
+  checks a sealed container entry by entry and pinpoints corruption by
+  name and offset.  Reads on this format are checksum-verified; a bad
+  record raises :class:`CorruptArchiveError` with offset context.  The
+  :class:`ArchiveAppender` ``durability`` policy controls how eagerly
+  records reach disk (``"none"`` — buffered, ``"flush"`` — per-entry
+  flush, ``"fsync"`` — per-entry flush + fsync).
 """
 from __future__ import annotations
 
 import io
 import os
 import struct
+import zlib
 
 import msgpack
 import numpy as np
@@ -72,111 +92,426 @@ def load(path: str):
 
 
 # ---------------------------------------------------------------------------
-# Streaming container (format v1): append-able records + index footer
+# Streaming container (v1 + durable v2): append-able records + index footer
 # ---------------------------------------------------------------------------
 
 STREAM_MAGIC = b"NLZSTRM1"
+STREAM_MAGIC_V2 = b"NLZSTRM2"
+_MAGICS = (STREAM_MAGIC, STREAM_MAGIC_V2)
 _LEN = struct.Struct("<Q")
+
+# v2 record = SYNC(8) ‖ <BQI>(checksum-algo flag, payload length, checksum)
+# ‖ msgpack payload.  The sync marker lets the salvage scanner resynchronize
+# past torn bytes; the flag byte keeps the checksum algorithm self-describing
+# per record so mixed-provenance containers stay verifiable.
+RECORD_SYNC = b"\xf9NLZREC\xa5"
+_V2_HDR = struct.Struct("<BQI")
+_V2_PREFIX = len(RECORD_SYNC) + _V2_HDR.size
+
+#: name -> flag byte.  ``crc32`` is zlib's C implementation — always
+#: available, fast enough that checksummed writes stay within the ≤5%
+#: container-overhead budget.  ``crc32c`` (the Castagnoli polynomial used by
+#: ext4/gcs) is honored when the optional ``crc32c`` wheel is importable;
+#: it is never auto-selected, so archives stay verifiable on every machine.
+CHECKSUM_ALGOS = {"crc32": 0, "crc32c": 1}
+
+try:  # optional wheel; flag byte 1 in record headers
+    import crc32c as _crc32c_mod
+except ImportError:  # pragma: no cover - depends on environment
+    _crc32c_mod = None
+
+_DURABILITY_LEVELS = ("none", "flush", "fsync")
+
+
+class CorruptArchiveError(ValueError):
+    """A streaming container (or one record in it) failed validation.
+
+    Carries ``offset`` (byte position of the bad record, when known) and
+    ``path`` so callers can pinpoint damage; raised instead of bare
+    ``struct.error``/msgpack exceptions on truncated or garbage input.
+    """
+
+    def __init__(self, message: str, *, offset: int | None = None,
+                 path: str | None = None):
+        ctx = []
+        if path is not None:
+            ctx.append(f"path={path!r}")
+        if offset is not None:
+            ctx.append(f"offset={offset}")
+        super().__init__(message + (f" [{', '.join(ctx)}]" if ctx else ""))
+        self.offset = offset
+        self.path = path
+
+
+def _checksum(algo: int, data: bytes) -> int:
+    if algo == 0:
+        return zlib.crc32(data) & 0xFFFFFFFF
+    if algo == 1:
+        if _crc32c_mod is None:
+            raise RuntimeError(
+                "archive record uses crc32c checksums but the optional "
+                "'crc32c' wheel is not installed")
+        return _crc32c_mod.crc32c(data) & 0xFFFFFFFF
+    raise CorruptArchiveError(f"unknown checksum algorithm flag {algo}")
 
 
 def is_streaming_archive(path_or_bytes) -> bool:
-    """Sniff the streaming-container magic (path or leading bytes)."""
+    """Sniff the streaming-container magic (path or leading bytes).
+
+    False — never an exception — for short/garbage input, including files
+    under 8 bytes.
+    """
     if isinstance(path_or_bytes, (bytes, bytearray)):
-        return bytes(path_or_bytes[:8]) == STREAM_MAGIC
+        head = bytes(path_or_bytes[:8])
+    else:
+        try:
+            with open(path_or_bytes, "rb") as f:
+                head = f.read(8)
+        except (OSError, TypeError, ValueError):
+            return False
+    return head in _MAGICS
+
+
+def _read_record_at(f, offset: int, version: int, *, path=None,
+                    verify_checksum: bool = True):
+    """Read + decode one record at ``offset``; returns
+    ``(obj, payload_len, next_offset)``.  All failure modes — truncation,
+    bad sync, checksum mismatch, undecodable msgpack — raise
+    :class:`CorruptArchiveError` with offset context."""
+    f.seek(offset)
+    if version == 1:
+        hdr = f.read(_LEN.size)
+        if len(hdr) < _LEN.size:
+            raise CorruptArchiveError("truncated record header",
+                                      offset=offset, path=path)
+        (n,) = _LEN.unpack(hdr)
+        body_off = offset + _LEN.size
+    else:
+        pre = f.read(_V2_PREFIX)
+        if len(pre) < _V2_PREFIX:
+            raise CorruptArchiveError("truncated record header",
+                                      offset=offset, path=path)
+        if pre[:len(RECORD_SYNC)] != RECORD_SYNC:
+            raise CorruptArchiveError("missing record sync marker",
+                                      offset=offset, path=path)
+        algo, n, crc = _V2_HDR.unpack(pre[len(RECORD_SYNC):])
+        body_off = offset + _V2_PREFIX
+    payload = f.read(n)
+    if len(payload) < n:
+        raise CorruptArchiveError(
+            f"truncated record payload ({len(payload)}/{n} bytes)",
+            offset=offset, path=path)
+    if version == 2 and verify_checksum and _checksum(algo, payload) != crc:
+        raise CorruptArchiveError("record checksum mismatch",
+                                  offset=offset, path=path)
     try:
-        with open(path_or_bytes, "rb") as f:
-            return f.read(8) == STREAM_MAGIC
-    except (OSError, TypeError):
-        return False
+        obj = loads(payload)
+    except Exception as e:
+        raise CorruptArchiveError(f"undecodable record: {e}",
+                                  offset=offset, path=path) from e
+    return obj, n, body_off + n
+
+
+def _find_sync(f, start: int, end: int, chunk: int = 1 << 16):
+    """Next RECORD_SYNC occurrence at/after ``start`` (chunked scan with
+    marker-straddling overlap), or None."""
+    overlap = len(RECORD_SYNC) - 1
+    pos = start
+    while pos < end:
+        f.seek(pos)
+        buf = f.read(min(chunk + overlap, end - pos))
+        i = buf.find(RECORD_SYNC)
+        if i >= 0:
+            return pos + i
+        if len(buf) <= overlap:
+            return None
+        pos += len(buf) - overlap
+    return None
 
 
 class ArchiveAppender:
     """Incremental streaming-archive writer.
 
-    ``append``/``add_entry`` write length-prefixed msgpack records as they
+    ``append``/``add_entry`` write self-delimiting msgpack records as they
     arrive (the async writer thread calls this one entry at a time);
     ``finalize`` seals the container with the index footer.  ``sink`` is a
     path or a binary file object.
+
+    ``version=2`` (default) writes the durable ``NLZSTRM2`` format:
+    per-record sync markers + checksums, an optional ``prelude`` metadata
+    record crash-readable before any entry lands, and a ``durability``
+    policy — ``"none"`` (buffered), ``"flush"`` (per-entry flush) or
+    ``"fsync"`` (per-entry flush + fsync, so a sealed entry survives OS
+    crash, not just process death).  ``version=1`` reproduces the legacy
+    ``NLZSTRM1`` byte stream exactly.
     """
 
-    def __init__(self, sink):
+    def __init__(self, sink, *, version: int = 2, durability: str = "none",
+                 checksum: str = "crc32", prelude: dict | None = None):
+        if version not in (1, 2):
+            raise ValueError(f"unknown container version {version!r}")
+        if durability not in _DURABILITY_LEVELS:
+            raise ValueError(f"durability must be one of {_DURABILITY_LEVELS},"
+                             f" got {durability!r}")
+        if checksum not in CHECKSUM_ALGOS:
+            raise ValueError(f"checksum must be one of "
+                             f"{tuple(CHECKSUM_ALGOS)}, got {checksum!r}")
+        self.version = version
+        self.durability = durability
+        self._algo = CHECKSUM_ALGOS[checksum]
+        self._magic = STREAM_MAGIC if version == 1 else STREAM_MAGIC_V2
         self._own = isinstance(sink, (str, bytes, os.PathLike))
         self._f = open(sink, "wb") if self._own else sink
-        self._f.write(STREAM_MAGIC)
-        self._offset = len(STREAM_MAGIC)
+        self._f.write(self._magic)
+        self._offset = len(self._magic)
         self.entries: dict[str, list[int]] = {}   # name -> [offset, length]
         self.bytes_written = self._offset
+        if prelude is not None:
+            if version == 1:
+                raise ValueError("prelude records require container version 2")
+            self.append({"prelude": version, "meta": prelude})
+            self._sync()
 
     def append(self, obj) -> tuple[int, int]:
         data = dumps(obj)
         off = self._offset
-        self._f.write(_LEN.pack(len(data)))
-        self._f.write(data)
-        self._offset += _LEN.size + len(data)
+        if self.version == 1:
+            self._f.write(_LEN.pack(len(data)))
+            self._f.write(data)
+            self._offset += _LEN.size + len(data)
+        else:
+            crc = _checksum(self._algo, data)
+            self._f.write(RECORD_SYNC)
+            self._f.write(_V2_HDR.pack(self._algo, len(data), crc))
+            self._f.write(data)
+            self._offset += _V2_PREFIX + len(data)
         self.bytes_written = self._offset
         return off, len(data)
 
     def add_entry(self, name: str, entry: dict) -> None:
         off, ln = self.append({"name": name, "entry": entry})
         self.entries[name] = [off, ln]
+        self._sync()
+
+    def _sync(self) -> None:
+        if self.durability == "none":
+            return
+        self._f.flush()
+        if self.durability == "fsync":
+            try:
+                os.fsync(self._f.fileno())
+            except (OSError, AttributeError, io.UnsupportedOperation):
+                pass  # in-memory sinks (BytesIO) have nothing to fsync
 
     def finalize(self, meta: dict) -> int:
         """Write the index footer; returns total container bytes."""
-        footer = {"version": 1, "meta": meta, "entries": self.entries}
+        footer = {"version": self.version, "meta": meta,
+                  "entries": self.entries}
         foff, _ = self.append(footer)
         self._f.write(_LEN.pack(foff))
-        self._f.write(STREAM_MAGIC)
-        self._offset += _LEN.size + len(STREAM_MAGIC)
+        self._f.write(self._magic)
+        self._offset += _LEN.size + len(self._magic)
         self.bytes_written = self._offset
         self._f.flush()
+        if self.durability == "fsync":
+            self._sync()
         if self._own:
             self._f.close()
         return self._offset
 
+    def rewind(self, offset: int) -> None:
+        """Roll the container back to ``offset`` (a record boundary): the
+        writer's retry path drops a partially-written record before
+        re-attempting it, so a retried entry never leaves torn bytes."""
+        self._f.seek(offset)
+        try:
+            self._f.truncate(offset)
+        except (OSError, io.UnsupportedOperation):
+            pass  # non-truncatable sink: the retried record overwrites
+        self._offset = offset
+        self.bytes_written = offset
+        self.entries = {n: v for n, v in self.entries.items()
+                        if v[0] < offset}
+
     def abort(self) -> None:
         """Close without a footer (error path); the file stays sniffable as
-        a streaming archive but unreadable — by design, half-written
-        snapshots must not decode silently."""
+        a streaming archive but footer-less — by design, half-written
+        snapshots must not decode silently.  On v2 the sealed entries are
+        still recoverable via ``repair=True``."""
+        self._f.flush()
         if self._own:
             self._f.close()
 
 
+def scan_container(source, *, path: str | None = None) -> dict:
+    """Salvage scan: walk a streaming container record by record from the
+    front, independent of the footer.
+
+    Works on sealed, footerless and truncated containers.  Returns::
+
+        {"version", "sealed", "entries": {name: [off, len]}, "meta",
+         "prelude", "footer_offset", "damage": [{"offset", "error"}, ...]}
+
+    Every checksum-intact entry record is indexed; damaged stretches are
+    reported and — on v2 — skipped by resynchronizing on the record sync
+    marker (v1 has no sync markers, so a v1 scan stops at the first bad
+    record).  ``meta`` comes from the footer when the walk reaches one,
+    else from the prelude, else ``{}``.
+    """
+    own = isinstance(source, (str, bytes, os.PathLike))
+    if own and path is None:
+        path = os.fspath(source)
+    f = open(source, "rb") if own else source
+    try:
+        end = f.seek(0, io.SEEK_END)
+        f.seek(0)
+        head = f.read(8)
+        if head not in _MAGICS:
+            raise CorruptArchiveError(
+                "not a NeurLZ streaming archive (bad magic)", path=path)
+        version = 1 if head == STREAM_MAGIC else 2
+        out = {"version": version, "sealed": False, "entries": {},
+               "meta": None, "prelude": None, "footer_offset": None,
+               "damage": []}
+        footer_meta = None
+        off = len(head)
+        trailer_len = _LEN.size + len(head)
+        while off < end:
+            if end - off == trailer_len:
+                f.seek(off)
+                tail = f.read(trailer_len)
+                if tail[_LEN.size:] == head:
+                    out["sealed"] = True
+                    out["footer_offset"] = _LEN.unpack(tail[:_LEN.size])[0]
+                    break
+            try:
+                rec, pln, nxt = _read_record_at(f, off, version, path=path)
+            except CorruptArchiveError as e:
+                out["damage"].append({"offset": off, "error": str(e)})
+                if version == 1:
+                    break
+                resync = _find_sync(f, off + 1, end)
+                if resync is None:
+                    break
+                off = resync
+                continue
+            if isinstance(rec, dict) and "name" in rec and "entry" in rec:
+                out["entries"][rec["name"]] = [off, pln]
+            elif isinstance(rec, dict) and rec.get("prelude"):
+                out["prelude"] = rec.get("meta")
+            elif isinstance(rec, dict) and "entries" in rec and "meta" in rec:
+                footer_meta = rec["meta"]
+            off = nxt
+        if footer_meta is not None:
+            out["meta"] = footer_meta
+        elif out["prelude"] is not None:
+            out["meta"] = out["prelude"]
+        else:
+            out["meta"] = {}
+        return out
+    finally:
+        if own:
+            f.close()
+
+
 class ArchiveReader:
-    """Random-access reader for the streaming container.
+    """Random-access reader for the streaming container (v1 and v2).
 
     Decodes the index footer once, then ``read_entry(name)`` loads exactly
     one field's record from disk — the basis of one-field-at-a-time decode.
-    ``entry_reads`` records every entry record pulled off disk, in order
-    (the footer is not an entry) — the accounting that lets tests assert a
-    lazy decode touched only one field's aux closure.
+    On v2 every record read is checksum-verified.  ``entry_reads`` records
+    every entry record pulled off disk, in order (the footer is not an
+    entry) — the accounting that lets tests assert a lazy decode touched
+    only one field's aux closure.
+
+    ``repair=True`` skips the footer entirely and rebuilds the index with
+    :func:`scan_container` — the path for footerless/truncated (crashed)
+    containers; ``salvaged`` is True when the container was not sealed.
     """
 
-    def __init__(self, source):
+    def __init__(self, source, *, repair: bool = False):
         self._own = isinstance(source, (str, bytes, os.PathLike))
+        self._path = os.fspath(source) if self._own else None
         self._f = open(source, "rb") if self._own else source
         self._f.seek(0)
-        if self._f.read(8) != STREAM_MAGIC:
-            raise ValueError("not a NeurLZ streaming archive (bad magic)")
-        self._f.seek(-(len(STREAM_MAGIC) + _LEN.size), io.SEEK_END)
-        foff = _LEN.unpack(self._f.read(_LEN.size))[0]
-        if self._f.read(8) != STREAM_MAGIC:
-            raise ValueError("truncated NeurLZ streaming archive (no trailer)")
-        footer = self._read_record(foff)
-        self.version = footer["version"]
-        self.meta = footer["meta"]
-        self.entries = footer["entries"]
+        head = self._f.read(8)
+        if head not in _MAGICS:
+            raise CorruptArchiveError(
+                "not a NeurLZ streaming archive (bad magic)", path=self._path)
+        self.version = 1 if head == STREAM_MAGIC else 2
+        self._magic = head
+        self.salvaged = False
+        self.prelude: dict | None = None
+        self.damage: list[dict] = []
+        if repair:
+            self._load_salvaged()
+        else:
+            self._load_footer()
         self.entry_reads: list[str] = []
 
+    def _load_footer(self) -> None:
+        end = self._f.seek(0, io.SEEK_END)
+        trailer_len = _LEN.size + len(self._magic)
+        if end < len(self._magic) + trailer_len:
+            raise CorruptArchiveError(
+                "container too short for a trailer (crashed write? open "
+                "with repair=True to salvage)", offset=end, path=self._path)
+        self._f.seek(end - trailer_len)
+        foff = _LEN.unpack(self._f.read(_LEN.size))[0]
+        if self._f.read(len(self._magic)) != self._magic:
+            raise CorruptArchiveError(
+                "truncated streaming archive (no trailer; open with "
+                "repair=True to salvage)", path=self._path)
+        if not len(self._magic) <= foff < end - trailer_len:
+            raise CorruptArchiveError(
+                "footer offset out of range", offset=foff, path=self._path)
+        footer = self._read_record(foff)
+        if not (isinstance(footer, dict) and "entries" in footer
+                and "meta" in footer):
+            raise CorruptArchiveError(
+                "trailer does not point at an index footer", offset=foff,
+                path=self._path)
+        self.version = footer.get("version", self.version)
+        self.meta = footer["meta"]
+        self.entries = footer["entries"]
+
+    def _load_salvaged(self) -> None:
+        scan = scan_container(self._f, path=self._path)
+        self.meta = scan["meta"]
+        self.entries = scan["entries"]
+        self.prelude = scan["prelude"]
+        self.damage = scan["damage"]
+        self.salvaged = not scan["sealed"]
+
+    def read_prelude(self) -> dict | None:
+        """The v2 prelude metadata record, or None (v1, or none written)."""
+        if self.prelude is not None or self.version != 2:
+            return self.prelude
+        try:
+            rec, _, _ = _read_record_at(self._f, len(self._magic), 2,
+                                        path=self._path)
+        except CorruptArchiveError:
+            return None
+        if isinstance(rec, dict) and rec.get("prelude"):
+            self.prelude = rec.get("meta")
+        return self.prelude
+
     def _read_record(self, offset: int):
-        self._f.seek(offset)
-        n = _LEN.unpack(self._f.read(_LEN.size))[0]
-        return loads(self._f.read(n))
+        obj, _, _ = _read_record_at(self._f, offset, self.version,
+                                    path=self._path)
+        return obj
 
     def read_entry(self, name: str) -> dict:
         off, _ = self.entries[name]
         rec = self._read_record(off)
+        if not (isinstance(rec, dict) and "name" in rec and "entry" in rec):
+            raise CorruptArchiveError(
+                f"index for {name!r} does not point at an entry record",
+                offset=off, path=self._path)
         if rec["name"] != name:
-            raise ValueError(f"index points at {rec['name']!r}, not {name!r}")
+            raise CorruptArchiveError(
+                f"index points at {rec['name']!r}, not {name!r}",
+                offset=off, path=self._path)
         self.entry_reads.append(name)
         return rec["entry"]
 
@@ -189,6 +524,50 @@ class ArchiveReader:
 
     def __exit__(self, *exc):
         self.close()
+
+
+def verify_container(source) -> dict:
+    """Entry-by-entry integrity check.
+
+    Returns ``{"version", "sealed", "ok", "entries": {name: {"offset",
+    "ok", "error"}}}``.  On a sealed container every indexed entry is
+    re-read through the checksum-verified path (v2) or decode-validated
+    (v1), so a flipped bit is pinpointed by entry name and offset.  On an
+    unsealed (crashed) container the salvage index is verified instead and
+    ``sealed``/``ok`` are False.
+    """
+    own = isinstance(source, (str, bytes, os.PathLike))
+    path = os.fspath(source) if own else None
+    f = open(source, "rb") if own else source
+    try:
+        try:
+            reader = ArchiveReader(f)
+            sealed = True
+        except CorruptArchiveError:
+            f.seek(0)
+            reader = ArchiveReader(f, repair=True)
+            sealed = not reader.salvaged
+        report = {"version": reader.version, "sealed": sealed,
+                  "entries": {}, "ok": False}
+        for name, (off, _ln) in reader.entries.items():
+            status = {"offset": off, "ok": True, "error": None}
+            try:
+                rec = reader._read_record(off)
+                got = rec.get("name") if isinstance(rec, dict) else None
+                if got != name:
+                    raise CorruptArchiveError(
+                        f"index points at {got!r}, not {name!r}",
+                        offset=off, path=path)
+            except CorruptArchiveError as e:
+                status["ok"] = False
+                status["error"] = str(e)
+            report["entries"][name] = status
+        report["ok"] = sealed and all(
+            s["ok"] for s in report["entries"].values())
+        return report
+    finally:
+        if own:
+            f.close()
 
 
 def pack_weights(params_tree, dtype: str = "float32") -> dict:

@@ -35,6 +35,7 @@ from collections.abc import Mapping
 
 import numpy as np
 
+from .. import faults as faults_lib
 from ..compressors import registry
 from ..obs import telemetry as obs_lib
 from . import archive as arc_io
@@ -60,27 +61,38 @@ class Archive(Mapping):
         self.telemetry = obs_lib.NULL      # assign a Telemetry handle to
         #   trace decodes ("decode" spans, "archive.entry_reads" counter);
         #   repro.NeurLZ(telemetry=...) sets it on archives it opens
+        self.faults = faults_lib.DEFAULT   # assign a FaultConfig to retry
+        #   transient entry-read failures in decode (site "decode.entry");
+        #   repro.NeurLZ(faults=...) sets it on archives it opens
 
     # -- constructors -------------------------------------------------------
 
     @classmethod
-    def open(cls, source) -> "Archive":
+    def open(cls, source, *, repair: bool = False) -> "Archive":
         """Open either container format (path or binary file object).
 
         Streaming containers open lazily: only the index footer is read.
         Whole-dict files load the dict (that format is one msgpack blob —
         it has no random-access index to defer to).
+
+        ``repair=True`` (streaming containers): skip the footer and rebuild
+        the index by salvage-scanning the records — the way to open a
+        footerless or truncated container from a crashed run.  Every
+        checksum-intact entry is served; :attr:`salvaged` reports whether
+        the container was unsealed.  Ignored for whole-dict files (one
+        msgpack blob either loads or it doesn't).
         """
         if isinstance(source, (str, bytes, os.PathLike)):
             if arc_io.is_streaming_archive(source):
-                return cls(reader=arc_io.ArchiveReader(source),
+                return cls(reader=arc_io.ArchiveReader(source,
+                                                       repair=repair),
                            path=os.fspath(source))
             return cls(arc=arc_io.load(source), path=os.fspath(source))
         source.seek(0)          # sniff from the start, wherever the caller
         head = source.read(8)   # left the position (e.g. just-written EOF)
         source.seek(0)
         if arc_io.is_streaming_archive(head):
-            return cls(reader=arc_io.ArchiveReader(source))
+            return cls(reader=arc_io.ArchiveReader(source, repair=repair))
         return cls(arc=arc_io.loads(source.read()))
 
     @classmethod
@@ -114,11 +126,48 @@ class Archive(Mapping):
         return {k: self._arc[k] for k in ("slice_axis", "compressor")}
 
     @property
+    def salvaged(self) -> bool:
+        """True when opened with ``repair=True`` against an unsealed
+        container (the index was rebuilt by scanning, not read from a
+        footer)."""
+        return bool(self._reader is not None and self._reader.salvaged)
+
+    @property
+    def damage(self) -> list[dict]:
+        """Damage report from a repair scan: one ``{"offset", "error"}``
+        per unreadable region skipped (empty for clean/sealed opens)."""
+        if self._reader is None:
+            return []
+        return list(self._reader.damage)
+
+    def verify(self) -> dict:
+        """Re-read every entry through the checksum path and report
+        per-entry status: ``{"version", "sealed", "ok", "entries":
+        {name: {"offset", "ok", "error"}}}``.  A clean container reports
+        ``ok=True`` everywhere; a flipped bit pinpoints the failing entry
+        and its record offset.  Whole-dict archives have no per-record
+        checksums — they report trivially ok (the msgpack load already
+        validated framing)."""
+        if not self.streaming:
+            return {"version": 0, "sealed": True, "ok": True,
+                    "entries": {n: {"offset": None, "ok": True,
+                                    "error": None}
+                                for n in self.field_names}}
+        source = self._path if self._path is not None else self._reader._f
+        return arc_io.verify_container(source)
+
+    @property
     def field_names(self) -> list[str]:
         """Entry names, snapshot order (block entries under their own
         ``name#bN`` names; see :attr:`block_manifest`)."""
         if self.streaming:
-            return list(self._reader.meta["field_order"])
+            order = self._reader.meta.get("field_order")
+            if order is None:       # salvaged container without a prelude:
+                return list(self._reader.entries)  # record order
+            if self.salvaged:       # prelude lists the *planned* order —
+                # a partial container only holds a prefix of it
+                return [n for n in order if n in self._reader.entries]
+            return list(order)
         return list(self._arc["fields"])
 
     @property
@@ -137,9 +186,16 @@ class Archive(Mapping):
         if not self.streaming:
             return self._arc["fields"][name]
         if name not in self._entries:
-            self._entries[name] = self._reader.read_entry(name)
+            self._entries[name] = self._read_entry(name)
             self.telemetry.counter("archive.entry_reads").add()
         return self._entries[name]
+
+    def _read_entry(self, name: str) -> dict:
+        """Entry read through the fault layer: probes the injection site
+        ``"decode.entry"`` and retries transient read failures when a
+        :class:`repro.faults.RetryPolicy` is configured."""
+        return self.faults.run(lambda: self._reader.read_entry(name),
+                               site="decode.entry", tel=self.telemetry)
 
     def _entry_transient(self, name: str) -> dict:
         """Read an entry WITHOUT inserting it into the cache (reuses a
@@ -149,7 +205,7 @@ class Archive(Mapping):
         if not self.streaming or name in self._entries:
             return self.entry(name)
         self.telemetry.counter("archive.entry_reads").add()
-        return self._reader.read_entry(name)
+        return self._read_entry(name)
 
     # -- decode -------------------------------------------------------------
 

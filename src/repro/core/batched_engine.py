@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import faults as faults_lib
 from ..compressors import registry
 from ..distributed import sharding as shardlib
 from ..obs import telemetry as obs_lib
@@ -373,19 +374,42 @@ def group_results(state: _GroupState):
 
 def _finalize_group(state: _GroupState, fields, recs, ebs, conv_arcs, config,
                     collect_stats, out_fields, on_entry=None,
-                    tel=obs_lib.NULL) -> None:
-    """Blocking stage: fetch residuals, enhancement, entry packing."""
+                    tel=obs_lib.NULL, fc=faults_lib.DEFAULT,
+                    degraded=None) -> None:
+    """Blocking stage: fetch residuals, enhancement, entry packing.
+
+    A per-field enhancer failure (injected fault at ``train.<name>``,
+    non-finite loss, OOM in enhancement) degrades that field to a conv-only
+    entry — same normalized reason and entry bytes as the serial engine —
+    instead of aborting the snapshot."""
     config = group_config(config, state.group)
     with tel.span("finalize", group=",".join(state.group.names)):
         for f, name, hist, resid in group_results(state):
             x = np.asarray(fields[name])
             aux_names = neurlz._aux_names(config, name, fields)
-            entry = neurlz.pack_entry(
-                config, conv_arcs[name], state.params[f], state.stats[f],
-                aux_names, ebs[name], state.net_cfg, hist, collect_stats)
-            neurlz.finalize_entry(entry, x, recs[name], resid, ebs[name],
-                                  state.stats[f], config)
-            if tel.enabled and tel.config.learning_traces:
+            entry, reason = None, None
+            try:
+                fc.check(f"train.{name}")
+                if fc.degrade and not neurlz.history_is_finite(hist):
+                    reason = faults_lib.degrade_reason()
+                else:
+                    entry = neurlz.pack_entry(
+                        config, conv_arcs[name], state.params[f],
+                        state.stats[f], aux_names, ebs[name], state.net_cfg,
+                        hist, collect_stats)
+                    neurlz.finalize_entry(entry, x, recs[name], resid,
+                                          ebs[name], state.stats[f], config)
+            except Exception as exc:
+                if not (fc.degrade and faults_lib.is_degradable(exc)):
+                    raise
+                reason = faults_lib.degrade_reason(exc)
+            if reason is not None:
+                entry = neurlz.pack_degraded_entry(config, conv_arcs[name],
+                                                   ebs[name], reason)
+                if degraded is not None:
+                    degraded.append(name)
+                tel.counter("faults.degraded").add()
+            elif tel.enabled and tel.config.learning_traces:
                 obs_lib.learning_trace(
                     tel, name, hist, eb=ebs[name],
                     vrange=neurlz.field_vrange(x),
@@ -421,6 +445,7 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
     """
     config = config or neurlz.NeurLZConfig(engine="batched")
     tel = obs_lib.of(config)
+    fc = faults_lib.of(config)
     t0 = time.time()
     with tel.span("compress", root=True, engine="batched",
                   fields=len(fields)):
@@ -473,6 +498,7 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
         # tensors until an end-of-run finalize pass.
         depth = max(2, len(train_devs) + 1)
         out_fields: dict = {}
+        degraded: list[str] = []
         states: list[_GroupState] = []
         for gi, group in enumerate(groups):
             conv_compress(group.names)
@@ -487,10 +513,11 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
             if len(states) >= depth:
                 _finalize_group(states.pop(0), fields, recs, ebs, conv_arcs,
                                 config, collect_stats, out_fields, on_entry,
-                                tel=tel)
+                                tel=tel, fc=fc, degraded=degraded)
         for state in states:
             _finalize_group(state, fields, recs, ebs, conv_arcs, config,
-                            collect_stats, out_fields, on_entry, tel=tel)
+                            collect_stats, out_fields, on_entry, tel=tel,
+                            fc=fc, degraded=degraded)
         # Conventional compression that ran lazily inside the loop belongs
         # to conv_s, not train_s (keep the two disjoint, like the serial
         # engine).
@@ -499,7 +526,8 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
 
         timing = obs_lib.build_timing(
             tel, total_s=time.time() - t0, conv_s=stage.stats.conv_s,
-            train_s=train_time, conv_stage=stage.stats.as_dict())
+            train_s=train_time, conv_stage=stage.stats.as_dict(),
+            degraded_fields=degraded)
         with tel.span("assemble"):
             return neurlz.assemble_archive(fields, out_fields, config,
                                            timing)
@@ -520,9 +548,15 @@ def decompress(arc) -> dict[str, np.ndarray]:
         {name: e["conv"] for name, e in arc["fields"].items()})
 
     # Group fields by inference signature so each dispatch is shape-static.
+    # Degraded (conv-only) entries have no network: their conventional
+    # reconstruction IS the decode, same as the serial path.
     sig_groups: dict[tuple, list[str]] = {}
     prepared: dict[str, tuple] = {}
+    out = {}
     for name, e in arc["fields"].items():
+        if e.get("degraded"):
+            out[name] = np.asarray(recs[name])
+            continue
         net_cfg, params = neurlz.decode_entry_net(e)
         aux = [recs[a] for a in e["aux"]]
         stats = [tuple(s) for s in e["stats"]]
@@ -533,7 +567,6 @@ def decompress(arc) -> dict[str, np.ndarray]:
         sig_groups.setdefault(sig, []).append(name)
         prepared[name] = (net_cfg, params, jnp.asarray(inputs))
 
-    out = {}
     for sig, names in sig_groups.items():
         spec = tuple((prepared[n][0].regulated, prepared[n][0].skip)
                      for n in names)

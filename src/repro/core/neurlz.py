@@ -42,6 +42,7 @@ import jax
 import numpy as np
 
 from .. import compressors
+from .. import faults as faults_lib
 from ..compressors import outliers as outlier_codec
 from ..obs import telemetry as obs_lib
 from . import archive as arc_io
@@ -73,6 +74,8 @@ class NeurLZConfig:
     max_resident_bytes: int = 0         # streaming residency budget (0 = off)
     telemetry: object | None = None     # repro.obs.Telemetry handle (None =
     #   disabled: every instrumentation point is a shared no-op singleton)
+    faults: object | None = None        # repro.faults.FaultConfig (None =
+    #   defaults: no injection, no retries, conv-only degradation on)
 
     def net_config(self, c_in: int) -> skipping_dnn.SkippingDNNConfig:
         return skipping_dnn.SkippingDNNConfig(
@@ -149,6 +152,35 @@ def pack_entry(config: NeurLZConfig, conv_arc: dict, params, stats,
         "learn_residual": config.learn_residual,
         "loss_history": history if collect_stats else [],
     }
+
+
+def pack_degraded_entry(config: NeurLZConfig, conv_arc: dict, eb: float,
+                        reason: str) -> dict:
+    """Conv-only entry for a field whose enhancer failed (non-finite loss,
+    injected fault, OOM).  No weights/net — decode returns the conventional
+    reconstruction, which already honors the exact ``abs_eb`` (the
+    conventional stage guarantees ``|x - x'| <= eb``, tighter than both the
+    strict 1x and relaxed 2x contracts).  ``reason`` is the normalized
+    :func:`repro.faults.degrade_reason` string, so every engine emits a
+    byte-identical entry for the same failure."""
+    return {
+        "conv": conv_arc,
+        "stats": [],
+        "aux": [],
+        "mode": config.mode,
+        "abs_eb": eb,
+        "learn_residual": config.learn_residual,
+        "loss_history": [],
+        "degraded": reason,
+    }
+
+
+def history_is_finite(history) -> bool:
+    """False when the training-loss trajectory went NaN/inf — the enhancer
+    weights are poisoned from that epoch on, so the field degrades."""
+    if not history:
+        return True
+    return bool(np.all(np.isfinite(np.asarray(history, dtype=np.float64))))
 
 
 def enhance_and_mask(x: np.ndarray, rec: np.ndarray, resid_norm: np.ndarray,
@@ -243,7 +275,7 @@ def entry_base_bytes(entry: dict) -> float:
     """Conv payload + enhancer weight bytes of a packed entry — the
     epoch-independent part of the learning-trace bitrate prediction."""
     return (compressors.archive_nbytes(entry["conv"])
-            + entry["weights"]["nbytes"])
+            + (entry["weights"]["nbytes"] if "weights" in entry else 0))
 
 
 def _sample_psnr_hook(tel, x, rec, inputs, eb, stats, config, net_cfg):
@@ -273,6 +305,7 @@ def _sample_psnr_hook(tel, x, rec, inputs, eb, stats, config, net_cfg):
 def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats,
                      bounds=None):
     tel = obs_lib.of(config)
+    fc = faults_lib.of(config)
     t0 = time.time()
     with tel.span("compress", root=True, engine="serial",
                   fields=len(fields)):
@@ -302,6 +335,7 @@ def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats,
                 rec_refs[a] += 1
 
         out_fields = {}
+        degraded: list[str] = []
         train_time = 0.0
         for name, x in fields.items():
             x = np.asarray(x)
@@ -313,28 +347,42 @@ def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats,
             net_cfg = fcfg.net_config(1 + len(aux))
             tcfg = fcfg.train_config()
 
+            entry, sampled, reason = None, None, None
             with tel.span("train", field=name):
-                inputs, targets, stats = build_dataset(x, recs[name], eb,
-                                                       aux, fcfg)
+                try:
+                    fc.check(f"train.{name}")
+                    inputs, targets, stats = build_dataset(x, recs[name], eb,
+                                                           aux, fcfg)
 
-                key = jax.random.PRNGKey(tcfg.seed)
-                params = skipping_dnn.init_params(key, net_cfg)
-                on_epoch, sampled = _sample_psnr_hook(
-                    tel, x, recs[name], inputs, eb, stats, fcfg, net_cfg)
-                tt = time.time()
-                params, _, history = online_trainer.train(
-                    params, inputs, targets, tcfg, net_cfg,
-                    on_epoch=on_epoch)
-                train_time += time.time() - tt
+                    key = jax.random.PRNGKey(tcfg.seed)
+                    params = skipping_dnn.init_params(key, net_cfg)
+                    on_epoch, sampled = _sample_psnr_hook(
+                        tel, x, recs[name], inputs, eb, stats, fcfg, net_cfg)
+                    tt = time.time()
+                    params, _, history = online_trainer.train(
+                        params, inputs, targets, tcfg, net_cfg,
+                        on_epoch=on_epoch)
+                    train_time += time.time() - tt
 
-                resid_norm = online_trainer.predict_residual(params, inputs,
-                                                             net_cfg)
-                entry = pack_entry(fcfg, conv_arcs[name], params, stats,
-                                   aux_names, eb, net_cfg, history,
-                                   collect_stats)
-                finalize_entry(entry, x, recs[name], resid_norm, eb, stats,
-                               fcfg)
-            if tel.enabled and tel.config.learning_traces:
+                    if fc.degrade and not history_is_finite(history):
+                        reason = faults_lib.degrade_reason()
+                    else:
+                        resid_norm = online_trainer.predict_residual(
+                            params, inputs, net_cfg)
+                        entry = pack_entry(fcfg, conv_arcs[name], params,
+                                           stats, aux_names, eb, net_cfg,
+                                           history, collect_stats)
+                        finalize_entry(entry, x, recs[name], resid_norm, eb,
+                                       stats, fcfg)
+                except Exception as exc:
+                    if not (fc.degrade and faults_lib.is_degradable(exc)):
+                        raise
+                    reason = faults_lib.degrade_reason(exc)
+            if reason is not None:
+                entry = pack_degraded_entry(fcfg, conv_arcs[name], eb, reason)
+                degraded.append(name)
+                tel.counter("faults.degraded").add()
+            elif tel.enabled and tel.config.learning_traces:
                 obs_lib.learning_trace(
                     tel, name, history, eb=eb, vrange=field_vrange(x),
                     base_bytes=entry_base_bytes(entry), n_points=int(x.size),
@@ -347,7 +395,8 @@ def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats,
 
         timing = obs_lib.build_timing(
             tel, total_s=time.time() - t0, conv_s=stage.stats.conv_s,
-            train_s=train_time, conv_stage=stage.stats.as_dict())
+            train_s=train_time, conv_stage=stage.stats.as_dict(),
+            degraded_fields=degraded)
         with tel.span("assemble"):
             return assemble_archive(fields, out_fields, config, timing)
 
@@ -393,6 +442,10 @@ def decode_field_entry(e: dict, rec: np.ndarray, aux: list,
     reconstructions (its own and its aux fields'): enhancer inference +
     enhancement + outlier patching.  The one decode body shared by the
     serial path, streaming ``iter_decompress`` and ``Archive.decode``."""
+    if e.get("degraded"):
+        # Conv-only entry (enhancer failure at compress time): the
+        # conventional reconstruction IS the decode, bound already honored.
+        return np.asarray(rec)
     net_cfg, params = decode_entry_net(e)
     stats = [tuple(s) for s in e["stats"]]
     inputs, _, _ = online_trainer.make_dataset(
@@ -433,7 +486,7 @@ def field_bitrate(arc: dict, name: str, num_points: int) -> dict:
     """Paper bit-rate accounting: size(Z) + supplementary, bits/value."""
     e = arc["fields"][name]
     conv_b = compressors.archive_nbytes(e["conv"])
-    weight_b = e["weights"]["nbytes"]
+    weight_b = e["weights"]["nbytes"] if "weights" in e else 0.0
     out_b = 0.0
     out_bits_paper = 0.0
     if "outliers" in e:

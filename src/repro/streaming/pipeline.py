@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import io
+import os
 import threading
 import time
 from collections import deque
@@ -43,6 +44,7 @@ from typing import Mapping
 
 import numpy as np
 
+from .. import faults as faults_lib
 from ..compressors import registry
 from ..core import archive as arc_io
 from ..core import batched_engine, neurlz
@@ -61,6 +63,13 @@ class StreamConfig:
     writer_queue: int = 4       # pending entries before put() back-pressures
     depth: int = 2              # dispatched-but-unretired groups in flight
     prefetch: bool = True       # reader-thread lookahead of the next group
+    container_version: int = 2  # 2 = durable NLZSTRM2 (checksums + salvage);
+    #   1 = legacy NLZSTRM1 byte stream
+    durability: str = "none"    # none | flush | fsync — how eagerly sealed
+    #   entries reach disk (fsync: an entry survives OS crash, not just
+    #   process death)
+    checksum: str = "crc32"     # per-record checksum algo (v2): crc32 |
+    #   crc32c (needs the optional crc32c wheel)
 
 
 class ResidencyLedger:
@@ -145,6 +154,19 @@ def order_groups(groups, aux_map, metas):
     return order
 
 
+class _NullCtx:
+    """No-op stand-in for the straggler watchdog's step context."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CTX = _NullCtx()
+
+
 class _SnapshotView(dict):
     """Group arrays plus name-membership over the *whole* snapshot, so the
     shared engine helpers can validate cross-field aux names against fields
@@ -165,10 +187,75 @@ def _dataset_nbytes(meta: source_lib.FieldMeta, c_in: int,
     return int(np.prod(sliced)) * 4 * (c_in + 1)
 
 
+def _config_signature(config, rel_eb, abs_eb) -> dict:
+    """The compatibility fingerprint a resumed run must match: everything
+    that changes entry bytes.  Recorded in the v2 prelude, compared before
+    salvaged entries are trusted."""
+    return {
+        "compressor": config.compressor,
+        "mode": config.mode,
+        "seed": config.seed,
+        "epochs": config.epochs,
+        "batch": config.batch,
+        "lr": config.lr,
+        "slice_axis": config.slice_axis,
+        "skip": config.skip,
+        "learn_residual": config.learn_residual,
+        "weight_dtype": config.weight_dtype,
+        "widths": list(config.widths),
+        "rel_eb": rel_eb,
+        "abs_eb": abs_eb,
+    }
+
+
+def _salvage_for_resume(sink, names, sig) -> dict[str, dict]:
+    """Pull every intact entry out of a partial container at ``sink`` before
+    the fresh :class:`ArchiveAppender` truncates it.
+
+    Returns ``{name: entry}`` for the completed fields (held in memory —
+    packed entries are codec-compressed, small next to raw fields).  An
+    absent/foreign file resumes as a fresh run; a container written under a
+    different config signature or field set is a hard error — silently
+    mixing entries from two runs would break the per-entry byte-identity
+    contract.
+    """
+    if not isinstance(sink, (str, bytes, os.PathLike)):
+        return {}
+    if not (os.path.exists(sink) and os.path.getsize(sink) > 0
+            and arc_io.is_streaming_archive(sink)):
+        return {}
+    out: dict[str, dict] = {}
+    with arc_io.ArchiveReader(sink, repair=True) as r:
+        pre = r.prelude or {}
+        old_sig = pre.get("config_sig")
+        if old_sig is not None and sig is not None and old_sig != sig:
+            diff = sorted(k for k in sig
+                          if old_sig.get(k) != sig.get(k))
+            raise ValueError(
+                f"resume: partial container at {os.fspath(sink)!r} was "
+                f"written under a different configuration (differs in "
+                f"{diff}); delete it or rerun with the original settings")
+        stale = sorted(set(r.entries) - set(names))
+        if stale:
+            raise ValueError(
+                f"resume: partial container holds fields {stale} that are "
+                "not in this snapshot; refusing to mix runs")
+        for name in r.entries:
+            try:
+                entry = r.read_entry(name)
+            except arc_io.CorruptArchiveError:
+                continue        # torn/corrupt record: recompress that field
+            if entry.get("degraded"):
+                continue        # give a degraded field another chance
+            out[name] = entry
+    return out
+
+
 def compress(source, sink, rel_eb: float | None = None, *,
              abs_eb: float | None = None, config=None,
              collect_stats: bool = True,
-             stream: StreamConfig | None = None, bounds=None) -> dict:
+             stream: StreamConfig | None = None, bounds=None,
+             resume: bool = False) -> dict:
     """Stream-compress a snapshot into an incremental archive container.
 
     ``source`` is anything :func:`repro.streaming.source.as_source`
@@ -179,10 +266,18 @@ def compress(source, sink, rel_eb: float | None = None, *,
     mode-homogeneous, and the conventional stage batches per bound spec).
     Returns a report dict (timing, peak residency, writer stats).
     Entries are bit-identical to ``engine="serial"`` archives.
+
+    ``resume=True``: when ``sink`` is a path holding a partial container
+    from a killed run, every intact entry is salvaged (byte-identical
+    re-append), the completed fields are skipped, and only the rest is
+    compressed — a crashed streaming run loses at most its in-flight
+    group.  The salvaged container must carry a matching config prelude;
+    a mismatch is a hard error, never silent mixing.
     """
     config = config or neurlz.NeurLZConfig(engine="streaming")
     stream = stream or StreamConfig()
     tel = obs_lib.of(config)
+    fc = faults_lib.of(config)
     budget = (stream.max_resident_bytes
               if stream.max_resident_bytes is not None
               else config.max_resident_bytes)
@@ -206,23 +301,61 @@ def compress(source, sink, rel_eb: float | None = None, *,
                     raise KeyError(
                         f"cross-field aux {missing} not in input fields")
             c_ins = {n: 1 + len(aux_map[n]) for n in names}
+            sig = _config_signature(config, rel_eb, abs_eb)
+            # Salvage BEFORE the appender below truncates the sink; the
+            # salvaged fields drop out of the group plan entirely (their
+            # reconstructions are still conv-compressed on demand when an
+            # unfinished field needs them as aux — dependency order holds).
+            salvaged: dict[str, dict] = {}
+            if resume:
+                salvaged = _salvage_for_resume(sink, names, sig)
+            remaining = [n for n in names if n not in salvaged]
             groups = batched_engine.plan_groups_from_meta(
-                {n: metas[n].shape for n in names}, c_ins, config,
-                modes=modes)
+                {n: metas[n].shape for n in remaining},
+                {n: c_ins[n] for n in remaining}, config,
+                modes=({n: modes[n] for n in remaining}
+                       if modes is not None else None))
             order = order_groups(groups, aux_map, metas)
-        root_sp.set(fields=len(names), groups=len(order))
+        root_sp.set(fields=len(names), groups=len(order),
+                    resumed=len(salvaged))
 
-        rec_refs = {n: 1 for n in names}
-        for n in names:
+        rec_refs = {n: 1 for n in remaining}
+        for n in remaining:
             for a in aux_map[n]:
-                rec_refs[a] += 1
+                rec_refs[a] = rec_refs.get(a, 0) + 1
 
+        # The prelude makes a crashed container self-describing: the
+        # salvage scanner and a later resume know the field set and config
+        # without ever reaching the (never-written) footer.
+        prelude = {
+            "field_order": names,
+            "shapes": {n: list(metas[n].shape) for n in names},
+            "slice_axis": config.slice_axis,
+            "compressor": config.compressor,
+            "aux": aux_map,
+            "config_sig": sig,
+        }
         tcfg = config.train_config()
         ledger = ResidencyLedger(budget, telemetry=tel)
         writer = AsyncArchiveWriter(sink, config,
                                     collect_stats=collect_stats,
                                     queue_size=stream.writer_queue,
-                                    telemetry=tel)
+                                    telemetry=tel, faults=fc,
+                                    version=stream.container_version,
+                                    durability=stream.durability,
+                                    checksum=stream.checksum,
+                                    prelude=prelude)
+        # Re-append the salvaged entries first, in snapshot field order —
+        # msgpack round-trips deterministically, so each re-appended entry
+        # is byte-identical to the killed run's (and to a serial run's).
+        for n in names:
+            if n in salvaged:
+                writer.put_entry(n, salvaged[n])
+        watchdog = None
+        if fc.straggler_deadline_s is not None:
+            watchdog = faults_lib.StepWatchdog(
+                fc.straggler_deadline_s,
+                on_straggler=lambda i: tel.counter("faults.stragglers").add())
         reader = ThreadPoolExecutor(max_workers=1,
                                     thread_name_prefix="neurlz-reader")
         xs: dict[str, np.ndarray] = {}
@@ -284,23 +417,43 @@ def compress(source, sink, rel_eb: float | None = None, *,
                 ledger.drop(f"rec:{name}")
 
         def retire(state) -> None:
-            """Sync the oldest group, hand entries to the writer, evict."""
+            """Sync the oldest group, hand entries to the writer, evict.
+            A per-field enhancer failure (injected, non-finite loss, OOM in
+            enhancement) degrades that field to a conv-only entry instead
+            of aborting the snapshot."""
             gcfg = batched_engine.group_config(config, state.group)
             with tel.span("retire", group=",".join(state.group.names)):
                 for f, name, hist, resid in \
                         batched_engine.group_results(state):
                     x = np.asarray(xs[name])
-                    _, mask = neurlz.enhance_and_mask(
-                        x, recs[name], resid, ebs[name], state.stats[f],
-                        gcfg)
-                    trace = ((neurlz.field_vrange(x), int(x.size))
-                             if want_traces else None)
-                    writer.put(EntryTask(
-                        name=name, conv_arc=conv_arcs.pop(name),
-                        params=state.params[f], stats=state.stats[f],
-                        aux=aux_map[name], eb=ebs[name],
-                        net_cfg=state.net_cfg, history=hist, mask=mask,
-                        mode=state.group.mode, trace=trace))
+                    reason, mask = None, None
+                    try:
+                        fc.check(f"train.{name}")
+                        if fc.degrade and not neurlz.history_is_finite(hist):
+                            reason = faults_lib.degrade_reason()
+                        else:
+                            _, mask = neurlz.enhance_and_mask(
+                                x, recs[name], resid, ebs[name],
+                                state.stats[f], gcfg)
+                    except Exception as exc:
+                        if not (fc.degrade and faults_lib.is_degradable(exc)):
+                            raise
+                        reason = faults_lib.degrade_reason(exc)
+                    if reason is not None:
+                        writer.put(EntryTask(
+                            name=name, conv_arc=conv_arcs.pop(name),
+                            params=None, stats=[], aux=[], eb=ebs[name],
+                            net_cfg=None, history=[], mask=None,
+                            mode=state.group.mode, degraded=reason))
+                    else:
+                        trace = ((neurlz.field_vrange(x), int(x.size))
+                                 if want_traces else None)
+                        writer.put(EntryTask(
+                            name=name, conv_arc=conv_arcs.pop(name),
+                            params=state.params[f], stats=state.stats[f],
+                            aux=aux_map[name], eb=ebs[name],
+                            net_cfg=state.net_cfg, history=hist, mask=mask,
+                            mode=state.group.mode, trace=trace))
                     xs.pop(name, None)
                     ledger.drop(f"x:{name}")
                     ledger.drop(f"ds:{name}")
@@ -322,6 +475,13 @@ def compress(source, sink, rel_eb: float | None = None, *,
             for k, v in cost.items():
                 ledger.add(k, v)
 
+        def load_field(name: str) -> np.ndarray:
+            """Source load under the fault layer: the ``"reader.load"``
+            site is probed per attempt and transient I/O errors retry
+            under the configured policy."""
+            return fc.run(lambda: src.load(name), site="reader.load",
+                          tel=tel)
+
         def ensure_aux_rec(name: str) -> None:
             """Conv-compress an aux producer early (transient load)."""
             if name in recs:
@@ -329,42 +489,46 @@ def compress(source, sink, rel_eb: float | None = None, *,
             cost = {f"rec:{name}": metas[name].nbytes,
                     f"tmpx:{name}": metas[name].nbytes}
             admit(cost, f"aux reconstruction of {name!r}")
-            conv_many({name: src.load(name)})
+            conv_many({name: load_field(name)})
             ledger.drop(f"tmpx:{name}")
 
         def prefetch_load(group):
             # Runs on the reader thread: its "read" span has no enclosing
             # span there, so it parents to the run's root span.
             with tel.span("read", group=",".join(group.names)):
-                return {n: src.load(n) for n in group.names}
+                return {n: load_field(n) for n in group.names}
 
         prefetched = None           # (group, future, cost) for order[i+1]
         t_train0 = time.time()
         conv_before = stage.stats.conv_s
         try:
             for gi, group in enumerate(order):
-                if prefetched is not None and prefetched[0] is group:
-                    arrays = prefetched[1].result()
-                else:
-                    admit(group_cost(group), f"group {group.names}")
-                    with tel.span("load", group=",".join(group.names)):
-                        arrays = {n: src.load(n) for n in group.names}
-                prefetched = None
-                xs.update(arrays)
-                # Conv-compress the group's own fields first (fused, from
-                # the already-loaded arrays) so an in-group aux producer
-                # never takes the transient-reload path below.
-                conv_many({n: xs[n] for n in group.names if n not in recs})
-                for name in group.names:
-                    for a in aux_map[name]:
-                        ensure_aux_rec(a)
-                with tel.span("train", group=",".join(group.names)):
-                    state = batched_engine._prepare_group(
-                        group,
-                        _SnapshotView({n: xs[n] for n in group.names},
-                                      names),
-                        recs, ebs, config, tcfg)
-                    batched_engine._dispatch_group(state, config, tcfg)
+                straggle = (watchdog.step(gi) if watchdog is not None
+                            else _NULL_CTX)
+                with straggle:
+                    if prefetched is not None and prefetched[0] is group:
+                        arrays = prefetched[1].result()
+                    else:
+                        admit(group_cost(group), f"group {group.names}")
+                        with tel.span("load", group=",".join(group.names)):
+                            arrays = {n: load_field(n) for n in group.names}
+                    prefetched = None
+                    xs.update(arrays)
+                    # Conv-compress the group's own fields first (fused,
+                    # from the already-loaded arrays) so an in-group aux
+                    # producer never takes the transient-reload path below.
+                    conv_many({n: xs[n] for n in group.names
+                               if n not in recs})
+                    for name in group.names:
+                        for a in aux_map[name]:
+                            ensure_aux_rec(a)
+                    with tel.span("train", group=",".join(group.names)):
+                        state = batched_engine._prepare_group(
+                            group,
+                            _SnapshotView({n: xs[n] for n in group.names},
+                                          names),
+                            recs, ebs, config, tcfg)
+                        batched_engine._dispatch_group(state, config, tcfg)
                 in_flight.append(state)
                 # Retire down to depth BEFORE prefetching: steady-state
                 # residency is then depth working sets, so a budget of ~2
@@ -387,11 +551,19 @@ def compress(source, sink, rel_eb: float | None = None, *,
             train_time = (time.time() - t_train0) \
                 - (stage.stats.conv_s - conv_before)
 
+            # Drain the writer queue before building timing: degradation
+            # decisions are made at pack time on the writer thread, and the
+            # footer's timing must already list them.
+            writer.drain()
             timing = obs_lib.build_timing(
                 tel, total_s=time.time() - t0, conv_s=stage.stats.conv_s,
                 train_s=train_time, conv_stage=stage.stats.as_dict(),
                 peak_resident_bytes=ledger.peak,
-                max_resident_bytes=budget)
+                max_resident_bytes=budget,
+                degraded_fields=list(writer.degraded),
+                resumed_fields=sorted(salvaged))
+            if watchdog is not None:
+                timing["straggler_overruns"] = len(watchdog.overruns)
             meta = {
                 "field_order": names,
                 "shapes": {n: list(metas[n].shape) for n in names},
@@ -435,10 +607,10 @@ class PipelineScheduler:
 
     def run(self, source, sink, rel_eb: float | None = None, *,
             abs_eb: float | None = None, collect_stats: bool = True,
-            bounds=None) -> dict:
+            bounds=None, resume: bool = False) -> dict:
         return compress(source, sink, rel_eb, abs_eb=abs_eb,
                         config=self.config, collect_stats=collect_stats,
-                        stream=self.stream, bounds=bounds)
+                        stream=self.stream, bounds=bounds, resume=resume)
 
 
 def compress_dict(fields, rel_eb: float | None = None, *,

@@ -19,7 +19,9 @@ def test_repro_all_snapshot():
     assert sorted(repro.__all__) == sorted([
         "NeurLZ", "Archive", "ErrorBound",
         "ModelConfig", "EngineConfig", "RegulationConfig",
-        "NeurLZConfig", "Telemetry", "TelemetryConfig", "open",
+        "NeurLZConfig", "Telemetry", "TelemetryConfig",
+        "FaultConfig", "FaultInjector", "InjectedFault", "RetryPolicy",
+        "CorruptArchiveError", "open",
     ])
     for name in repro.__all__:
         assert getattr(repro, name) is not None
@@ -39,11 +41,14 @@ SIGNATURES = {
     "NeurLZ.compress_to":
         "(self, source, sink, bounds=None, *, "
         "rel_eb: 'float | None' = None, abs_eb: 'float | None' = None, "
-        "collect_stats: 'bool' = True) -> 'Archive'",
+        "collect_stats: 'bool' = True, resume: 'bool' = False) "
+        "-> 'Archive'",
     "NeurLZ.decompress":
         "(self, archive, *, reassemble: 'bool' = False) -> 'dict'",
     # archive handle
-    "Archive.open": "(source) -> \"'Archive'\"",
+    "Archive.open":
+        "(source, *, repair: 'bool' = False) -> \"'Archive'\"",
+    "Archive.verify": "(self) -> 'dict'",
     "Archive.decode": "(self, name: 'str') -> 'np.ndarray'",
     "Archive.decode_all":
         "(self, *, engine: 'str' = 'serial', reassemble: 'bool' = False) "
@@ -64,7 +69,7 @@ SIGNATURES = {
         "weight_dtype='float32', widths=(4, 4, 6, 6, 8), engine='serial', "
         "conv_batch=True, field_batching='unroll', group_size=2, "
         "prefetch=True, field_shard=True, max_resident_bytes=0, "
-        "telemetry=None), "
+        "telemetry=None, faults=None), "
         "collect_stats: 'bool' = True, bounds=None) -> 'dict'",
     "core.decompress":
         "(arc, *, engine: 'str' = 'serial') -> 'dict[str, np.ndarray]'",
@@ -80,6 +85,7 @@ def test_signature_snapshot():
         "NeurLZ.compress_to": repro.NeurLZ.compress_to,
         "NeurLZ.decompress": repro.NeurLZ.decompress,
         "Archive.open": repro.Archive.open,
+        "Archive.verify": repro.Archive.verify,
         "Archive.decode": repro.Archive.decode,
         "Archive.decode_all": repro.Archive.decode_all,
         "Archive.bitrate": repro.Archive.bitrate,

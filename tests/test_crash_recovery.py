@@ -1,0 +1,308 @@
+"""Crash-safety of the NLZSTRM2 container: torn-write salvage, checksum
+verification, resumable compression, and typed corruption errors.
+
+The torn-write matrix is the core durability contract: a container killed
+at *any* byte offset must (a) refuse to open as sealed with a typed
+:class:`CorruptArchiveError`, and (b) salvage every fully-written entry
+**bit-identically** under ``repair=True``.  Resume then extends salvage to
+the compression side: re-running the same configuration over a torn
+container must produce entries byte-identical to an uninterrupted run.
+"""
+import io
+import os
+
+import numpy as np
+import pytest
+
+import repro
+from repro import core, streaming
+from repro.compressors import codec
+from repro.core import archive as A
+
+
+@pytest.fixture(params=["zlib", "zstd"])
+def codec_name(request):
+    if request.param == "zstd" and not codec.HAVE_ZSTD:
+        pytest.skip("zstandard not installed")
+    codec.set_default_codec(request.param)
+    yield request.param
+    codec.set_default_codec(None)
+
+
+def _snapshot(n_fields: int = 3) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(7)
+    return {f"f{i}": np.cumsum(rng.standard_normal((3, 8, 8)),
+                               axis=0).astype(np.float32)
+            for i in range(n_fields)}
+
+
+def _stream_cfg(**kw):
+    kw.setdefault("epochs", 1)
+    return core.NeurLZConfig(mode="strict", engine="streaming",
+                             group_size=1, **kw)
+
+
+def _write_container(tmp_path, fields=None):
+    p = os.fspath(tmp_path / "snap.nlz")
+    streaming.compress(fields or _snapshot(), p, 1e-3, config=_stream_cfg())
+    return p
+
+
+# -- torn-write matrix -------------------------------------------------------
+
+def test_torn_write_matrix(tmp_path, codec_name):
+    """Cut the container at a sweep of byte offsets: salvage must recover
+    exactly the fully-sealed entries, each bit-identical to the
+    uninterrupted container's record."""
+    p = _write_container(tmp_path)
+    data = open(p, "rb").read()
+    with A.ArchiveReader(p) as r:
+        full = {n: r.read_entry(n) for n in r.entries}
+        # index offsets are record starts; payload_len excludes the prefix
+        ends = {n: off + A._V2_PREFIX + ln
+                for n, (off, ln) in r.entries.items()}
+
+    torn = os.fspath(tmp_path / "torn.nlz")
+    # Stride plus every record-end boundary (the interesting edges).
+    cuts = sorted(set(range(9, len(data) - 1, max(1, len(data) // 40)))
+                  | set(ends.values()))
+    for cut in cuts:
+        with open(torn, "wb") as f:
+            f.write(data[:cut])
+        # A torn container never opens as sealed.
+        with pytest.raises(A.CorruptArchiveError):
+            A.ArchiveReader(torn).close()
+        with A.ArchiveReader(torn, repair=True) as r:
+            assert r.salvaged
+            expect = {n for n, e in ends.items() if e <= cut}
+            assert set(r.entries) == expect, f"cut={cut}"
+            for n in expect:
+                assert A.dumps(r.read_entry(n)) == A.dumps(full[n])
+
+
+def test_salvage_resyncs_past_corrupt_record(tmp_path):
+    """Damage *inside* one record must not take down the records after it:
+    the scanner resyncs on the next record marker."""
+    p = _write_container(tmp_path)
+    with A.ArchiveReader(p) as r:
+        offsets = dict(r.entries)
+    data = bytearray(open(p, "rb").read())
+    victim, (off, ln) = sorted(offsets.items(), key=lambda kv: kv[1][0])[0]
+    for i in range(off + 4, off + 8):    # stomp the first entry's payload
+        data[i] ^= 0xFF
+    torn = os.fspath(tmp_path / "bitrot.nlz")
+    open(torn, "wb").write(bytes(data))
+    with A.ArchiveReader(torn, repair=True) as r:
+        assert victim not in r.entries
+        assert set(r.entries) == set(offsets) - {victim}
+        assert any(d["offset"] <= off for d in r.damage)
+
+
+def test_verify_clean_container(tmp_path, codec_name):
+    p = _write_container(tmp_path)
+    rep = A.verify_container(p)
+    assert rep["sealed"] and rep["ok"]
+    assert all(e["ok"] and e["error"] is None
+               for e in rep["entries"].values())
+
+
+def test_verify_pinpoints_flipped_bit(tmp_path, codec_name):
+    p = _write_container(tmp_path)
+    with A.ArchiveReader(p) as r:
+        offsets = dict(r.entries)
+    victim, (off, ln) = sorted(offsets.items(), key=lambda kv: kv[1][0])[1]
+    data = bytearray(open(p, "rb").read())
+    data[off + A._V2_PREFIX + ln // 2] ^= 0x01   # flipped bit mid-payload
+    open(p, "wb").write(bytes(data))
+    rep = A.verify_container(p)
+    assert rep["sealed"] and not rep["ok"]
+    for name, e in rep["entries"].items():
+        if name == victim:
+            assert not e["ok"] and "checksum" in e["error"]
+            assert e["offset"] == off
+        else:
+            assert e["ok"], name
+
+
+def test_archive_handle_verify_and_repair(tmp_path):
+    p = _write_container(tmp_path)
+    with repro.Archive.open(p) as arc:
+        assert not arc.salvaged
+        rep = arc.verify()
+        assert rep["ok"] and rep["sealed"]
+        full = {n: arc.decode(n) for n in arc.field_names}
+    data = open(p, "rb").read()
+    torn = os.fspath(tmp_path / "torn.nlz")
+    open(torn, "wb").write(data[: len(data) // 2])
+    with repro.Archive.open(torn, repair=True) as arc:
+        assert arc.salvaged
+        assert arc.field_names            # at least one entry survived
+        for n in arc.field_names:
+            np.testing.assert_array_equal(arc.decode(n), full[n])
+
+
+# -- resume ------------------------------------------------------------------
+
+def _torn_copy(p, tmp_path, frac):
+    data = open(p, "rb").read()
+    torn = os.fspath(tmp_path / "resume.nlz")
+    open(torn, "wb").write(data[: int(len(data) * frac)])
+    return torn
+
+
+@pytest.mark.parametrize("frac", [0.2, 0.55, 0.9])
+def test_resume_byte_identical_to_uninterrupted(tmp_path, codec_name, frac):
+    fields = _snapshot()
+    sess = repro.NeurLZ(config=_stream_cfg())
+    p = os.fspath(tmp_path / "full.nlz")
+    arc_full = sess.compress_to(fields, p, rel_eb=1e-3)
+    torn = _torn_copy(p, tmp_path, frac)
+
+    arc = sess.compress_to(fields, torn, rel_eb=1e-3, resume=True)
+    assert A.dumps(arc.to_dict()["fields"]) == \
+        A.dumps(arc_full.to_dict()["fields"])
+    done = set(arc.report["resumed_fields"])
+    assert done <= set(fields)
+    rep = arc.verify()
+    assert rep["ok"] and rep["sealed"]
+    arc.close()
+    arc_full.close()
+
+
+def test_resume_into_fresh_sink_is_plain_run(tmp_path):
+    """resume=True against a nonexistent / empty sink degrades to a normal
+    run (nothing to salvage)."""
+    fields = _snapshot(2)
+    sess = repro.NeurLZ(config=_stream_cfg())
+    p = os.fspath(tmp_path / "fresh.nlz")
+    arc = sess.compress_to(fields, p, rel_eb=1e-3, resume=True)
+    assert arc.report["resumed_fields"] == []
+    assert arc.verify()["ok"]
+    arc.close()
+
+
+def test_resume_config_mismatch_is_hard_error(tmp_path):
+    fields = _snapshot(2)
+    sess = repro.NeurLZ(config=_stream_cfg())
+    p = os.fspath(tmp_path / "full.nlz")
+    sess.compress_to(fields, p, rel_eb=1e-3).close()
+    torn = _torn_copy(p, tmp_path, 0.6)
+    other = repro.NeurLZ(config=_stream_cfg(epochs=2))
+    with pytest.raises(ValueError, match="epochs"):
+        other.compress_to(fields, torn, rel_eb=1e-3, resume=True)
+    # different bound: also a mismatch, never silent
+    with pytest.raises(ValueError, match="rel_eb|abs_eb"):
+        sess.compress_to(fields, torn, rel_eb=1e-2, resume=True)
+
+
+def test_resume_stale_fields_is_hard_error(tmp_path):
+    fields = _snapshot(2)
+    sess = repro.NeurLZ(config=_stream_cfg())
+    p = os.fspath(tmp_path / "full.nlz")
+    sess.compress_to(fields, p, rel_eb=1e-3).close()
+    with pytest.raises(ValueError, match="f1"):
+        sess.compress_to({"f0": fields["f0"]}, p, rel_eb=1e-3, resume=True)
+
+
+# -- typed corruption errors / sniffing --------------------------------------
+
+def test_is_streaming_archive_robust_to_tiny_files(tmp_path):
+    for n in range(8):                   # every length below the magic size
+        p = os.fspath(tmp_path / f"tiny{n}")
+        open(p, "wb").write(b"\x00" * n)
+        assert A.is_streaming_archive(p) is False
+    assert A.is_streaming_archive(os.fspath(tmp_path / "absent")) is False
+    assert A.is_streaming_archive(b"NLZSTRM1") is True
+    assert A.is_streaming_archive(b"NLZSTRM2") is True
+
+
+@pytest.mark.parametrize("blob", [
+    b"", b"NL", b"NLZSTRM2", b"NLZSTRM2" + b"\x00" * 4,
+    b"garbage-not-a-container-at-all", b"NLZSTRM9" + b"\x00" * 64,
+])
+def test_corrupt_open_raises_typed_error(tmp_path, blob):
+    p = os.fspath(tmp_path / "bad.nlz")
+    open(p, "wb").write(blob)
+    with pytest.raises((A.CorruptArchiveError, ValueError)) as ei:
+        A.ArchiveReader(p).close()
+    if isinstance(ei.value, A.CorruptArchiveError):
+        assert ei.value.path == p        # offset context travels on the type
+
+
+def test_corrupt_error_carries_offset(tmp_path):
+    p = _write_container(tmp_path)
+    with A.ArchiveReader(p) as r:
+        victim, (off, ln) = sorted(r.entries.items(),
+                                   key=lambda kv: kv[1][0])[0]
+    data = bytearray(open(p, "rb").read())
+    data[off] ^= 0xFF
+    open(p, "wb").write(bytes(data))
+    with A.ArchiveReader(p) as r:
+        with pytest.raises(A.CorruptArchiveError) as ei:
+            r.read_entry(victim)
+        assert ei.value.offset is not None
+        assert str(ei.value.offset) in str(ei.value)
+
+
+# -- v1 compatibility / appender mechanics -----------------------------------
+
+def test_v1_containers_stay_readable(tmp_path):
+    p = os.fspath(tmp_path / "v1.nlz")
+    app = A.ArchiveAppender(p, version=1)
+    app.add_entry("a", {"conv": {"blob": b"x" * 32}})
+    app.add_entry("b", {"conv": {"blob": b"y" * 16}})
+    app.finalize({"field_order": ["a", "b"]})
+    assert A.is_streaming_archive(p)
+    with A.ArchiveReader(p) as r:
+        assert r.version == 1
+        assert r.read_entry("a")["conv"]["blob"] == b"x" * 32
+    rep = A.verify_container(p)          # v1 has no checksums: framing only
+    assert rep["sealed"] and rep["ok"]
+
+
+def test_v2_default_and_prelude_roundtrip():
+    buf = io.BytesIO()
+    app = A.ArchiveAppender(buf, prelude={"config_sig": {"epochs": 1}})
+    app.add_entry("a", {"conv": {"blob": b"z" * 8}})
+    app.finalize({"field_order": ["a"]})
+    buf.seek(0)
+    with A.ArchiveReader(buf) as r:
+        assert r.version == 2
+        assert r.read_prelude()["config_sig"] == {"epochs": 1}
+
+
+def test_appender_rewind_drops_partial_record():
+    buf = io.BytesIO()
+    app = A.ArchiveAppender(buf)
+    app.add_entry("a", {"conv": {"blob": b"A" * 24}})
+    boundary = app.bytes_written
+    app.add_entry("junk", {"conv": {"blob": b"J" * 100}})
+    app.rewind(boundary)
+    assert app.bytes_written == boundary and "junk" not in app.entries
+    app.add_entry("b", {"conv": {"blob": b"B" * 24}})
+    app.finalize({"field_order": ["a", "b"]})
+    buf.seek(0)
+    with A.ArchiveReader(buf) as r:
+        assert list(r.entries) == ["a", "b"]
+        assert r.read_entry("b")["conv"]["blob"] == b"B" * 24
+    assert A.verify_container(buf)["ok"]
+
+
+@pytest.mark.parametrize("durability", ["none", "flush", "fsync"])
+def test_durability_levels_produce_sealed_containers(tmp_path, durability):
+    p = os.fspath(tmp_path / f"{durability}.nlz")
+    app = A.ArchiveAppender(p, durability=durability)
+    app.add_entry("a", {"conv": {"blob": b"d" * 8}})
+    app.finalize({"field_order": ["a"]})
+    assert A.verify_container(p)["ok"]
+
+
+def test_bad_appender_knobs_raise():
+    with pytest.raises(ValueError):
+        A.ArchiveAppender(io.BytesIO(), version=3)
+    with pytest.raises(ValueError):
+        A.ArchiveAppender(io.BytesIO(), durability="sometimes")
+    with pytest.raises(ValueError):
+        A.ArchiveAppender(io.BytesIO(), checksum="md5")
+    with pytest.raises(ValueError):     # v1 records can't carry a prelude
+        A.ArchiveAppender(io.BytesIO(), version=1, prelude={"x": 1})
