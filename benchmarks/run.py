@@ -37,6 +37,7 @@ MODULES = [
 # (see each module's smoke path).
 MODULES_SMOKE = [
     "bench_kernels",
+    "bench_roofline",
     "bench_scalability",
     "bench_streaming",
     "bench_obs",
@@ -46,7 +47,7 @@ MODULES_SMOKE = [
 # Committed perf ledger (repo root): the smoke profile's machine-readable
 # run record; scripts/perf_summary.py --compare diffs two of these and
 # fails on >25% wall-clock regression.
-LEDGER = "BENCH_PR8.json"
+LEDGER = "BENCH_PR9.json"
 
 
 def main() -> None:

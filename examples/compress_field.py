@@ -79,6 +79,12 @@ def main():
                     help="batched = multi-field fused-dispatch engine; "
                          "streaming = bounded-memory pipeline + async "
                          "archive writer (both bit-identical to serial)")
+    ap.add_argument("--lowering", default="auto",
+                    choices=["eager", "jit", "pallas", "auto"],
+                    help="kernel lowering for the hot path; non-eager "
+                         "variants engage only where their byte-parity "
+                         "probe passes, so archives are identical either "
+                         "way (auto = fastest proven lowering)")
     ap.add_argument("--max-resident-mb", type=float, default=0.0,
                     help="streaming engine residency budget in MiB "
                          "(0 = track peak only, no ceiling)")
@@ -116,11 +122,13 @@ def main():
         model=repro.ModelConfig(epochs=args.epochs, cross_field=cross),
         engine=repro.EngineConfig(
             engine=args.engine, compressor=args.compressor,
+            lowering=args.lowering,
             max_resident_bytes=int(args.max_resident_mb * 2**20),
             telemetry=tel),
         regulation=repro.RegulationConfig(mode=args.mode))
     print(f"[compress] {args.dataset} {shape} eb={args.eb} mode={args.mode} "
-          f"epochs={args.epochs} cross_field=on engine={args.engine}"
+          f"epochs={args.epochs} cross_field=on engine={args.engine} "
+          f"lowering={args.lowering}"
           + (f" field_eb={ {n: (b.rel, b.abs, b.mode) for n, b in bounds.items()} }"
              if bounds else ""))
     path = args.out or os.path.join(

@@ -1,7 +1,7 @@
 """Summarize the §Perf iteration records (experiments/perf + baselines).
 
 Also diffs two benchmark ledgers (``benchmarks.run --smoke`` writes
-``BENCH_PR7.json`` at the repo root)::
+``BENCH_PR9.json`` at the repo root)::
 
     python scripts/perf_summary.py --compare old.json new.json
 

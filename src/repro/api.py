@@ -66,7 +66,9 @@ class EngineConfig:
     engine: str = "serial"              # serial | batched | streaming
     compressor: str = "szlike"          # conventional stage (registry name)
     conv_batch: bool = True             # snapshot-batched conventional stage
-    field_batching: str = "unroll"      # unroll (bit-exact) | vmap (stacked)
+    field_batching: str = "auto"        # auto | unroll | vmap (stacked)
+    lowering: str = "auto"              # eager | jit | pallas | auto — kernel
+    #   lowering for the hot ops (byte-identical-or-fallback contract)
     group_size: int = 2                 # fields per batched dispatch (0=all)
     prefetch: bool = True               # overlap conv stage with training
     field_shard: bool = True            # spread field groups over devices

@@ -26,12 +26,16 @@ enhancer is trained against the encoder-side reconstruction.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
+import warnings
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import codec, entropy
+from ..kernels import dispatch
 from .quantize import CODE_CAP, abs_bound_from_rel
 
 _INTERNAL = jnp.float64 if jnp.array(0.0, jnp.float64).dtype == jnp.float64 else jnp.float32
@@ -441,15 +445,140 @@ def lorenzo_undelta(d: jnp.ndarray, axes=None) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Lorenzo encode lowerings (repro.kernels.dispatch op "lorenzo")
+# ---------------------------------------------------------------------------
+
+def _lorenzo_encode_core(stacked, eb_arr, *, out_dtype: str):
+    """Dual-quantization encode over a stacked ``[F, ...]`` group.
+
+    The exact historical eager op sequence (prequant → escape detection →
+    delta → reconstruction); per-field bounds broadcast as ``[F, 1, ...]``.
+    Elementwise throughout and — deliberately — free of multiply-*add*
+    chains (``rec`` is a bare ``codes * step`` product and the cast-check
+    separates the product from the subtraction with dtype converts), so
+    XLA has no FMA to contract and the jitted lowering below is
+    byte-identical; the parity probe enforces rather than assumes this.
+    Returns ``(delta int32, unpred bool, rec)``.
+    """
+    step = 2.0 * eb_arr
+    q = jnp.round(stacked / step)
+    unpred = (jnp.abs(q) >= CODE_CAP) | ~jnp.isfinite(stacked)
+    qi = jnp.where(unpred, 0, q).astype(jnp.int32)
+    rec = qi.astype(stacked.dtype) * step
+    cast_bad = jnp.abs(rec.astype(jnp.dtype(out_dtype)).astype(rec.dtype)
+                       - stacked) > eb_arr
+    unpred = unpred | cast_bad
+    qi = jnp.where(unpred, 0, qi)
+    d = lorenzo_delta(qi, axes=range(1, qi.ndim))
+    rec = jnp.where(unpred, stacked, qi.astype(stacked.dtype) * step)
+    return d, unpred, rec
+
+
+# Compiled variant: one dispatch per group instead of ~10 eager ops, input
+# buffer donated (the stacked upload is dead after the call).  jax.jit's
+# compile cache keys on (stacked shape, dtype, out_dtype, backend), so a
+# snapshot's repeated same-shape groups compile once.
+_lorenzo_encode_jit = functools.partial(
+    jax.jit, static_argnames=("out_dtype",),
+    donate_argnums=(0,))(_lorenzo_encode_core)
+
+
+def lorenzo_jit_cache_size() -> int:
+    """Compiled-variant cache entries (conv-stage stats / tests)."""
+    return _lorenzo_encode_jit._cache_size()
+
+
+def _lorenzo_jit_entry(stacked, eb_arr, *, out_dtype: str):
+    with warnings.catch_warnings():
+        # Donation is best-effort: XLA declines to alias when the input
+        # stays live past its last read, and warns.  The decline is fine —
+        # silence only that warning.
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _lorenzo_encode_jit(stacked, eb_arr, out_dtype=out_dtype)
+
+
+def _lorenzo_jit_probe() -> bool:
+    """Byte-parity canary for the compiled encode: ragged odd shape, values
+    at quantization boundaries, a CODE_CAP overflow, a NaN and an
+    fp32-cast borderline — everything that could round differently if the
+    compiler re-associated or contracted the float ops."""
+    rng = np.random.default_rng(12345)
+    x = np.cumsum(rng.standard_normal((2, 5, 7, 3)), axis=1).astype(np.float32)
+    x[0, 0, 0, 0] = np.nan
+    x[0, 1, 2, 0] = 3.0e9            # CODE_CAP overflow at eb=1e-3
+    x[1, 2, 3, 1] = np.float32(2 ** 25) + 0.5   # cast-rounding boundary
+    xj = jnp.asarray(x)
+    eb = jnp.asarray(np.array([1e-3, 2e-2]).reshape(2, 1, 1, 1))
+    want = _lorenzo_encode_core(xj, eb, out_dtype="float32")
+    got = _lorenzo_jit_entry(jnp.asarray(x), eb, out_dtype="float32")
+    return all(np.asarray(w).tobytes() == np.asarray(g).tobytes()
+               for w, g in zip(want, got))
+
+
+def _lorenzo_pallas_entry(stacked, eb_arr, *, out_dtype: str):
+    """``lorenzo3d`` Pallas kernel wrapper (TPU target).  The kernel fuses
+    prequant+delta+rec but has no escape semantics (CODE_CAP overflow,
+    non-finite, cast-rounding literals), so escapes are recomputed around
+    it; the parity probe decides whether the composition is byte-exact."""
+    from ..kernels import ops as kernel_ops
+    outs_d, outs_u, outs_r = [], [], []
+    ebs = np.asarray(eb_arr).reshape(stacked.shape[0])
+    for f in range(stacked.shape[0]):
+        d, rec = kernel_ops.lorenzo_quantize(stacked[f], float(ebs[f]))
+        _, unpred, _ = _lorenzo_encode_core(
+            stacked[f][None], eb_arr[f][None], out_dtype=out_dtype)
+        outs_d.append(d)
+        outs_u.append(unpred[0])
+        outs_r.append(rec)
+    return (jnp.stack(outs_d), jnp.stack(outs_u), jnp.stack(outs_r))
+
+
+def _lorenzo_pallas_probe() -> bool:
+    return _probe_against_eager(_lorenzo_pallas_entry)
+
+
+def _probe_against_eager(candidate) -> bool:
+    rng = np.random.default_rng(99)
+    x = np.cumsum(rng.standard_normal((1, 6, 5, 4)), axis=1).astype(np.float32)
+    x[0, 0, 0, 0] = 4.0e9            # escape: the kernel has no CODE_CAP
+    xj = jnp.asarray(x)
+    eb = jnp.asarray(np.array([1e-3]).reshape(1, 1, 1, 1))
+    want = _lorenzo_encode_core(xj, eb, out_dtype="float32")
+    got = candidate(xj, eb, out_dtype="float32")
+    return all(np.asarray(w).tobytes() == np.asarray(g).tobytes()
+               for w, g in zip(want, got))
+
+
+dispatch.register("lorenzo", "eager", _lorenzo_encode_core)
+dispatch.register("lorenzo", "jit", _lorenzo_jit_entry,
+                  probe=_lorenzo_jit_probe)
+dispatch.register("lorenzo", "pallas", _lorenzo_pallas_entry,
+                  probe=_lorenzo_pallas_probe, backends=("tpu",))
+
+
+def _lorenzo_encode(stacked, eb_arr, out_dtype, lowering: str):
+    impl, _ = dispatch.resolve("lorenzo", lowering)
+    return impl(stacked, eb_arr, out_dtype=str(np.dtype(out_dtype)))
+
+
+# ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
 
 def compress(x: np.ndarray, rel_eb: float | None = None, *, abs_eb: float | None = None,
-             config: SZLikeConfig = SZLikeConfig()) -> tuple[dict, np.ndarray]:
+             config: SZLikeConfig = SZLikeConfig(),
+             lowering: str = "auto") -> tuple[dict, np.ndarray]:
     """Compress ``x``; returns ``(archive, reconstruction)``.
 
     The reconstruction is exactly what :func:`decompress` will produce —
     NeurLZ trains its enhancer against it without a decode round-trip.
+
+    ``lowering`` selects the Lorenzo quantize implementation through
+    :mod:`repro.kernels.dispatch` (byte-identical archives either way — a
+    variant that fails its parity probe falls back to eager).  The interp
+    predictor is eager-only: its encode walks host-side entropy state
+    between phases, so there is no jit variant to dispatch to.
     """
     x = np.asarray(x)
     if x.ndim not in (2, 3):
@@ -482,25 +611,23 @@ def compress(x: np.ndarray, rel_eb: float | None = None, *, abs_eb: float | None
             "literals": entropy.encode_floats(lits, config.zstd_level),
         }
     elif config.predictor == "lorenzo":
-        xj = jnp.asarray(work)
-        step = 2.0 * eb_int
-        q = jnp.round(xj / step)
-        unpred = (jnp.abs(q) >= CODE_CAP) | ~jnp.isfinite(xj)
-        qi = jnp.where(unpred, 0, q).astype(jnp.int32)
-        rec = qi.astype(xj.dtype) * step
-        cast_bad = jnp.abs(rec.astype(jnp.dtype(orig_dtype)).astype(rec.dtype) - xj) > eb_int
-        unpred = unpred | cast_bad
-        qi = jnp.where(unpred, 0, qi)
-        d = lorenzo_delta(qi)
-        rec = jnp.where(unpred, xj, qi.astype(xj.dtype) * step)
-        rec_np = np.asarray(rec)
-        lits = work[np.asarray(unpred)]
+        # One-field "group": the stacked [1, ...] op sequence is bitwise
+        # the per-field one (elementwise ops; the size-1 leading axis is
+        # skipped by the delta), which is the conv stage's byte-identity
+        # contract — and it shares the dispatch-lowered encode.
+        xj = jnp.asarray(work)[None]
+        eb_arr = jnp.asarray(
+            np.asarray([eb_int], np.float64).reshape((1,) + (1,) * work.ndim))
+        d, unpred, rec = _lorenzo_encode(xj, eb_arr, orig_dtype, lowering)
+        un_np = np.asarray(unpred)[0]
+        rec_np = np.asarray(rec)[0]
+        lits = work[un_np]
         arc = {
             "kind": "szlike", "predictor": "lorenzo",
             "shape": list(work.shape), "dtype": str(orig_dtype),
             "abs_eb": float(abs_eb), "eb_int": eb_int, "mean": mean,
-            "codes": entropy.encode_codes(np.asarray(d), config.zstd_level),
-            "unpred": _encode_mask(np.asarray(unpred).ravel(), config.zstd_level),
+            "codes": entropy.encode_codes(np.asarray(d)[0], config.zstd_level),
+            "unpred": _encode_mask(un_np.ravel(), config.zstd_level),
             "literals": entropy.encode_floats(lits, config.zstd_level),
         }
     else:
@@ -512,7 +639,8 @@ def compress(x: np.ndarray, rel_eb: float | None = None, *, abs_eb: float | None
 
 def compress_batched(xs, rel_eb: float | None = None, *,
                      abs_eb: float | None = None,
-                     config: SZLikeConfig = SZLikeConfig()) -> list:
+                     config: SZLikeConfig = SZLikeConfig(),
+                     lowering: str = "auto") -> list:
     """Compress a group of same-shape/same-dtype fields in one stacked pass.
 
     The conv-stage batched entry point: the group's whole quantize +
@@ -522,6 +650,10 @@ def compress_batched(xs, rel_eb: float | None = None, *,
     independent :func:`compress` calls — per-field bounds and means are
     derived exactly as the per-field path does and broadcast along the
     stacked axis.  Returns ``[(archive, reconstruction), ...]`` in order.
+
+    ``lowering`` routes the stacked Lorenzo quantize through
+    :mod:`repro.kernels.dispatch` exactly as :func:`compress` does —
+    byte-identical payloads under every verdict.
     """
     arrs = [np.asarray(x) for x in xs]
     if not arrs:
@@ -570,17 +702,7 @@ def compress_batched(xs, rel_eb: float | None = None, *,
         stacked = jnp.asarray(np.stack(works))
         bcast = (len(arrs),) + (1,) * len(shape)
         eb_arr = jnp.asarray(np.asarray(eb_ints, np.float64).reshape(bcast))
-        step = 2.0 * eb_arr
-        q = jnp.round(stacked / step)
-        unpred = (jnp.abs(q) >= CODE_CAP) | ~jnp.isfinite(stacked)
-        qi = jnp.where(unpred, 0, q).astype(jnp.int32)
-        rec = qi.astype(stacked.dtype) * step
-        cast_bad = jnp.abs(rec.astype(jnp.dtype(dtype)).astype(rec.dtype)
-                           - stacked) > eb_arr
-        unpred = unpred | cast_bad
-        qi = jnp.where(unpred, 0, qi)
-        d = lorenzo_delta(qi, axes=range(1, qi.ndim))
-        rec = jnp.where(unpred, stacked, qi.astype(stacked.dtype) * step)
+        d, unpred, rec = _lorenzo_encode(stacked, eb_arr, dtype, lowering)
         d_np, un_np, rec_np = np.asarray(d), np.asarray(unpred), np.asarray(rec)
         for f in range(len(arrs)):
             lits = works[f][un_np[f]]

@@ -13,9 +13,9 @@ resident together), so this engine restructures the hot path around the
     group to tune the pipeline depth).  Slice-count-ragged groups are
     handled natively: each field scans its own step count inside the shared
     dispatch.
-  * **Fused training dispatch** (``field_batching="unroll"``, default) —
-    *every epoch of every field of a group* runs in a single jitted
-    ``lax.scan`` dispatch.  Each field's scan body is exactly
+  * **Fused training dispatch** (``field_batching="unroll"``) — *every
+    epoch of every field of a group* runs in a single jitted ``lax.scan``
+    dispatch.  Each field's scan body is exactly
     :func:`repro.core.online_trainer.scan_train` — the serial trace — so
     trained weights, archives and reconstructions are **bit-identical** to
     the serial engine.
@@ -24,12 +24,21 @@ resident together), so this engine restructures the hot path around the
     each epoch runs as one ``jax.vmap``-over-fields ``lax.scan``; the
     stacked axis can be sharded across devices
     (:func:`repro.distributed.sharding.field_sharding`,
-    ``field_shard=True``).  Maximum batching for accelerator backends;
-    opt-in because it is not bit-equal to serial: equal-slice-count
-    groups agree to float rounding only (XLA lowers the grouped
-    bottleneck ``conv_transpose`` differently), and ragged fields train
-    the padded step count per epoch with modulo-resampled slices
+    ``field_shard=True``).  The skipping-DNN forward is built from
+    shift-and-accumulate ``lax.dot_general`` contractions that lower
+    identically under ``vmap`` (see :mod:`repro.core.skipping_dnn`), so
+    equal-slice-count groups are bit-identical to serial at most training
+    signatures (XLA:CPU can still partition a gradient GEMM differently
+    at some sizes); ragged fields train the padded step count per epoch
+    with modulo-resampled slices and diverge from the serial trajectory
     (error-bound guarantees are unaffected either way).
+  * **``field_batching="auto"`` (default)** — per group: the stacked
+    ``vmap`` path for multi-field groups with matching slice counts,
+    *verified* by a cached per-signature byte-parity probe
+    (:func:`vmap_bit_parity`) before use; ``unroll`` for ragged or
+    single-field groups, or when the probe finds the stacked gradient is
+    not bit-identical (:func:`resolve_batching`).  The default therefore
+    always round-trips byte-identical to serial.
   * **Async pipeline** — training *and* inference for every group are
     dispatched before any result is awaited, so the device queue never
     drains; the host meanwhile runs the *next* groups' conventional
@@ -146,9 +155,9 @@ def plan_groups(fields: Mapping[str, np.ndarray], config,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("spec", "epochs", "base_lr", "min_lr_frac",
-                                   "loss"))
+                                   "loss", "lowering"))
 def _train_group_fused(params_t, opt_t, xs_t, ys_t, base_key, *, spec, epochs,
-                       base_lr, min_lr_frac, loss):
+                       base_lr, min_lr_frac, loss, lowering="auto"):
     """All epochs of every field of a group in ONE dispatch.
 
     ``spec`` is a static tuple of per-field
@@ -171,7 +180,7 @@ def _train_group_fused(params_t, opt_t, xs_t, ys_t, base_key, *, spec, epochs,
             params_t[f], opt_t[f], xs_t[f], ys_t[f], batches,
             jnp.asarray(0, jnp.int32), cfg_reg=reg, cfg_skip=skip,
             total_steps=total_steps, base_lr=base_lr,
-            min_lr_frac=min_lr_frac, loss=loss)
+            min_lr_frac=min_lr_frac, loss=loss, lowering=lowering)
         new_p.append(p)
         new_o.append(o)
         losses.append(jnp.mean(lvals.reshape(epochs, steps), axis=1))
@@ -179,10 +188,11 @@ def _train_group_fused(params_t, opt_t, xs_t, ys_t, base_key, *, spec, epochs,
 
 
 @partial(jax.jit, static_argnames=("steps", "batch", "total_steps", "reg",
-                                   "skip", "base_lr", "min_lr_frac", "loss"))
+                                   "skip", "base_lr", "min_lr_frac", "loss",
+                                   "lowering"))
 def _epoch_vmapped(params_st, opt_st, xs, ys, epoch_key, start_step,
                    n_valid, *, steps, batch, total_steps, reg, skip,
-                   base_lr, min_lr_frac, loss):
+                   base_lr, min_lr_frac, loss, lowering="auto"):
     """One epoch as a single ``jax.vmap``-over-fields ``lax.scan``.
 
     ``xs``/``ys`` are padded to the group's max slice count ``[F,N,H,W,C]``
@@ -197,7 +207,7 @@ def _epoch_vmapped(params_st, opt_st, xs, ys, epoch_key, start_step,
 
     def loss_fn(p, xb, yb):
         return online_trainer.batch_loss(p, xb, yb, regulated=reg, skip=skip,
-                                         loss=loss)
+                                         loss=loss, lowering=lowering)
 
     def body(carry, idx):
         p, o, step = carry
@@ -218,8 +228,8 @@ def _epoch_vmapped(params_st, opt_st, xs, ys, epoch_key, start_step,
     return params_st, opt_st, jnp.mean(losses, axis=0)
 
 
-@partial(jax.jit, static_argnames=("spec",))
-def _predict_group(params_t, xs_t, *, spec):
+@partial(jax.jit, static_argnames=("spec", "lowering"))
+def _predict_group(params_t, xs_t, *, spec, lowering="auto"):
     """Batched ``predict_residual``: every field of a group, one dispatch.
 
     Always the exact per-field inference graph
@@ -229,7 +239,7 @@ def _predict_group(params_t, xs_t, *, spec):
     """
     return tuple(
         online_trainer.predict_graph(params_t[f], xs_t[f], regulated=reg,
-                                     skip=skip)
+                                     skip=skip, lowering=lowering)
         for f, (reg, skip) in enumerate(spec))
 
 
@@ -289,13 +299,87 @@ def _prepare_group(group: FieldGroup, fields, recs, ebs, config, tcfg,
                        steps=steps, batch=batches, total_steps=totals)
 
 
+def resolve_batching(strategy: str, slice_counts: list[int]) -> str:
+    """Structural strategy choice for one group.
+
+    ``auto`` proposes the stacked ``vmap`` path for multi-field groups
+    whose slice counts match; ragged groups (and single-field ones, where
+    stacking buys nothing) unroll — the vmap path would train them on the
+    padded step count with modulo-resampled slices, which diverges from
+    the serial trajectory.  An ``auto``-proposed vmap is additionally
+    gated by :func:`vmap_bit_parity` in :func:`_dispatch_group` before it
+    is used (verified, not assumed — same contract as the kernel-lowering
+    dispatch).
+    """
+    if strategy != "auto":
+        return strategy
+    uniform = len(set(slice_counts)) == 1
+    return "vmap" if uniform and len(slice_counts) > 1 else "unroll"
+
+
+# (slice_hw, c_in, batch, regulated, skip, loss, lowering) -> bool
+_vmap_parity: dict[tuple, bool] = {}
+
+
+def vmap_bit_parity(net_cfg, slice_hw: tuple, batch: int, tcfg) -> bool:
+    """Byte-parity probe for the stacked vmap strategy at one training
+    signature.
+
+    The fast shift-and-accumulate forward lowers identically under
+    ``jax.vmap`` for most shapes, but XLA:CPU may partition a *gradient*
+    contraction differently between the single and the batched GEMM at
+    some sizes, reassociating the reduction.  Lowered code is
+    shape-dependent, not value-dependent, so one byte-compare of
+    ``value_and_grad`` on canary inputs — per (spatial, channels, batch,
+    loss) signature, cached — decides whether the stacked path is
+    bit-identical to the per-field trace here.
+    """
+    key = (tuple(slice_hw), net_cfg.c_in, batch, net_cfg.regulated,
+           net_cfg.skip, tcfg.loss, tcfg.lowering)
+    if key in _vmap_parity:
+        return _vmap_parity[key]
+    h, w = slice_hw
+    kp = jax.random.PRNGKey(0)
+    params = skipping_dnn.init_params(kp, net_cfg)
+    k1, k2 = jax.random.split(jax.random.fold_in(kp, 1))
+    xs = jax.random.normal(k1, (2, batch, h, w, net_cfg.c_in), jnp.float32)
+    ys = jnp.clip(jax.random.normal(k2, (2, batch, h, w, 1), jnp.float32),
+                  -1.0, 1.0)
+
+    def loss_fn(p, xb, yb):
+        return online_trainer.batch_loss(
+            p, xb, yb, regulated=net_cfg.regulated, skip=net_cfg.skip,
+            loss=tcfg.loss, lowering=tcfg.lowering)
+
+    singles = [jax.jit(jax.value_and_grad(loss_fn))(params, xs[i], ys[i])
+               for i in range(2)]
+    pst = skipping_dnn.stack_params([params, params])
+    lv, gv = jax.jit(jax.vmap(jax.value_and_grad(loss_fn)))(pst, xs, ys)
+    ok = True
+    for i, (l1, g1) in enumerate(singles):
+        if np.asarray(l1).tobytes() != np.asarray(lv[i]).tobytes():
+            ok = False
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(gv)):
+            if np.asarray(a).tobytes() != np.asarray(b[i]).tobytes():
+                ok = False
+    _vmap_parity[key] = ok
+    return ok
+
+
 def _dispatch_group(state: _GroupState, config, tcfg) -> None:
     """Enqueue the group's full training AND inference without blocking."""
     net_cfg = state.net_cfg
     key = jax.random.PRNGKey(tcfg.seed)
-    if config.field_batching == "vmap":
+    strategy = resolve_batching(config.field_batching,
+                                [int(x.shape[0]) for x in state.inputs])
+    if strategy == "vmap" and config.field_batching == "auto":
+        n_max = max(int(x.shape[0]) for x in state.inputs)
+        if not vmap_bit_parity(net_cfg, state.group.slice_hw,
+                               min(tcfg.batch, n_max), tcfg):
+            strategy = "unroll"
+    if strategy == "vmap":
         _dispatch_vmapped(state, config, tcfg, key)
-    elif config.field_batching == "unroll":
+    elif strategy == "unroll":
         if tcfg.epochs <= 0:
             state.losses = jnp.zeros((0, len(state.group.names)), jnp.float32)
         else:
@@ -307,16 +391,16 @@ def _dispatch_group(state: _GroupState, config, tcfg) -> None:
                 state.params, state.opt, tuple(state.inputs),
                 tuple(state.targets), key, spec=spec, epochs=tcfg.epochs,
                 base_lr=tcfg.lr, min_lr_frac=tcfg.min_lr_frac,
-                loss=tcfg.loss)
+                loss=tcfg.loss, lowering=tcfg.lowering)
     else:
         raise ValueError(f"unknown field_batching {config.field_batching!r} "
-                         "(want 'unroll' or 'vmap')")
+                         "(want 'auto', 'unroll' or 'vmap')")
     # Inference consumes the (still lazy) trained params — queues right
     # behind training on the device, before any host sync.
     pspec = tuple((net_cfg.regulated, net_cfg.skip)
                   for _ in state.group.names)
     state.resids = _predict_group(tuple(state.params), tuple(state.inputs),
-                                  spec=pspec)
+                                  spec=pspec, lowering=tcfg.lowering)
 
 
 def _dispatch_vmapped(state: _GroupState, config, tcfg, key) -> None:
@@ -351,7 +435,8 @@ def _dispatch_vmapped(state: _GroupState, config, tcfg, key) -> None:
             params_st, opt_st, xs, ys, ekey, start, n_valid,
             steps=steps, batch=b, total_steps=steps * tcfg.epochs,
             reg=net_cfg.regulated, skip=net_cfg.skip,
-            base_lr=tcfg.lr, min_lr_frac=tcfg.min_lr_frac, loss=tcfg.loss)
+            base_lr=tcfg.lr, min_lr_frac=tcfg.min_lr_frac, loss=tcfg.loss,
+            lowering=tcfg.lowering)
         losses.append(mloss)
     state.losses = jnp.stack(losses) if losses else \
         jnp.zeros((0, len(state.group.names)), jnp.float32)
@@ -465,7 +550,8 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
         # (shape, dtype, bound spec) through the fused compressor entry.
         stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
                                          batch=config.conv_batch,
-                                         bounds=resolved, telemetry=tel)
+                                         bounds=resolved, telemetry=tel,
+                                         lowering=config.lowering)
 
         def conv_compress(names):
             todo = {n: fields[n] for n in names if n not in conv_arcs}
@@ -502,9 +588,13 @@ def compress(fields: Mapping[str, np.ndarray], rel_eb: float | None = None, *,
         states: list[_GroupState] = []
         for gi, group in enumerate(groups):
             conv_compress(group.names)
+            counts = [sliced_shape(np.asarray(fields[n]).shape,
+                                   config.slice_axis)[0]
+                      for n in group.names]
+            strategy = resolve_batching(config.field_batching, counts)
             dev = train_devs[gi % len(train_devs)] \
                 if (config.field_shard and len(train_devs) > 1
-                    and config.field_batching == "unroll") else None
+                    and strategy == "unroll") else None
             with tel.span("train", group=",".join(group.names)):
                 state = _prepare_group(group, fields, recs, ebs, config,
                                        tcfg, device=dev)

@@ -29,6 +29,7 @@ snapshot regresses to per-field call counts.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 from typing import Mapping
 
@@ -36,6 +37,18 @@ import numpy as np
 
 from ..compressors import registry
 from ..obs import telemetry as obs
+
+
+def _accepts_lowering(fn) -> bool:
+    """True iff ``fn`` takes a ``lowering`` kwarg (registry entries may wrap
+    third-party compressors that know nothing about kernel dispatch)."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+    return ("lowering" in params
+            or any(p.kind is inspect.Parameter.VAR_KEYWORD
+                   for p in params.values()))
 
 
 @dataclasses.dataclass
@@ -53,6 +66,10 @@ class ConvStats:
     fallback_fields: int = 0
     calls: int = 0
     conv_s: float = 0.0
+    # Dispatch calls that carried the kernel-lowering request through to the
+    # compressor entry (0 for third-party entries without a lowering kwarg).
+    lowered_calls: int = 0
+    lowering: str = "auto"
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -86,14 +103,24 @@ class ConvStage:
 
     def __init__(self, compressor: str, rel_eb: float | None = None,
                  abs_eb: float | None = None, *, batch: bool = True,
-                 bounds: Mapping | None = None, telemetry=None):
+                 bounds: Mapping | None = None, telemetry=None,
+                 lowering: str = "auto"):
         self.entry = registry.get(compressor)   # unknown name -> ValueError
         self.rel_eb = rel_eb
         self.abs_eb = abs_eb
         self.batch = batch
         # Per-field ErrorBound specs; fields absent here use the run scalars.
         self.bounds = dict(bounds) if bounds else None
-        self.stats = ConvStats()
+        self.lowering = lowering
+        # The lowering request rides along only when the entry declares a
+        # ``lowering`` kwarg — third-party compressor entries are untouched.
+        self._lower_kw = ({"lowering": lowering}
+                          if _accepts_lowering(self.entry.compress) else {})
+        self._lower_kw_batched = (
+            {"lowering": lowering}
+            if (self.entry.compress_batched is not None
+                and _accepts_lowering(self.entry.compress_batched)) else {})
+        self.stats = ConvStats(lowering=lowering)
         self.tel = telemetry if telemetry is not None else obs.NULL
 
     def bound_for(self, name: str) -> tuple[float | None, float | None]:
@@ -138,17 +165,21 @@ class ConvStage:
                 if (batch and len(group) > 1
                         and self.entry.batch_supports(dtype)):
                     results = self.entry.compress_batched(
-                        [arrs[n] for n in group], rel, abs_eb=ab)
+                        [arrs[n] for n in group], rel, abs_eb=ab,
+                        **self._lower_kw_batched)
                     self.stats.calls += 1
                     self.stats.batched_fields += len(group)
+                    self.stats.lowered_calls += bool(self._lower_kw_batched)
                     tel.counter("conv.dispatches").add()
                     tel.counter("conv.batched_fields").add(len(group))
                     out.update(zip(group, results))
                 else:
                     for n in group:
-                        out[n] = self.entry.compress(arrs[n], rel, abs_eb=ab)
+                        out[n] = self.entry.compress(arrs[n], rel, abs_eb=ab,
+                                                     **self._lower_kw)
                         self.stats.calls += 1
                         self.stats.fallback_fields += 1
+                        self.stats.lowered_calls += bool(self._lower_kw)
                         tel.counter("conv.dispatches").add()
                         tel.counter("conv.fallback_fields").add()
             sp.set(calls=self.stats.calls - calls0)

@@ -22,8 +22,9 @@ Three compression engines share this module's helpers:
     (:mod:`repro.core.batched_engine`): all fields of a snapshot train in a
     single dispatch per epoch, CPU-side conventional compression overlaps
     device-side training, and the stacked field axis can be sharded across
-    devices.  Archives are bit-compatible with the serial engine (and
-    bit-identical under the default ``field_batching="unroll"`` strategy).
+    devices.  Archives are bit-identical to the serial engine under the
+    default ``field_batching="auto"`` strategy (stacked ``vmap`` for
+    uniform groups, per-field unroll for ragged ones).
   * ``engine="streaming"`` — the bounded-memory pipeline
     (:mod:`repro.streaming`): fields are pulled lazily from a chunked
     source, conventional reconstructions are refcounted and evicted the
@@ -67,7 +68,10 @@ class NeurLZConfig:
     widths: tuple = (4, 4, 6, 6, 8)
     engine: str = "serial"              # serial | batched | streaming
     conv_batch: bool = True             # snapshot-batched conventional stage
-    field_batching: str = "unroll"      # unroll (bit-exact) | vmap (stacked)
+    field_batching: str = "auto"        # auto | unroll | vmap (stacked)
+    lowering: str = "auto"              # eager | jit | pallas | auto — kernel
+    #   lowering for the hot ops (repro.kernels.dispatch); every choice is
+    #   byte-identical to eager or falls back, so archives never depend on it
     group_size: int = 2                 # fields per batched dispatch (0 = all)
     prefetch: bool = True               # overlap CPU conv stage with training
     field_shard: bool = True            # spread field groups over devices
@@ -85,7 +89,7 @@ class NeurLZConfig:
     def train_config(self) -> online_trainer.TrainConfig:
         return online_trainer.TrainConfig(
             epochs=self.epochs, batch=self.batch, lr=self.lr, seed=self.seed,
-            slice_axis=self.slice_axis)
+            slice_axis=self.slice_axis, lowering=self.lowering)
 
 
 def _aux_names(cfg: NeurLZConfig, name: str, fields) -> list[str]:
@@ -190,6 +194,13 @@ def enhance_and_mask(x: np.ndarray, rec: np.ndarray, resid_norm: np.ndarray,
     :func:`finalize_entry` so the streaming pipeline can capture the mask on
     the compute thread and defer its *encoding* to the writer thread."""
     resid_norm = np.moveaxis(resid_norm, 0, config.slice_axis)
+    if config.learn_residual:
+        # Hot path: fused enhance + regulate + outlier capture through the
+        # kernel-lowering dispatcher (byte-identical to the sequence below
+        # by the dispatch parity contract).
+        return regulation.enhance_lowered(
+            rec, resid_norm, x, eb, out_dtype=x.dtype, mode=config.mode,
+            lowering=config.lowering)
     field_rec = _apply_enhancement(rec, resid_norm, eb, x.dtype, stats, config)
     mask = None
     if config.mode == "strict":
@@ -295,7 +306,8 @@ def _sample_psnr_hook(tel, x, rec, inputs, eb, stats, config, net_cfg):
     samples: list[float] = []
 
     def on_epoch(epoch, params, loss):
-        resid = online_trainer.predict_residual(params, inp_s, net_cfg)
+        resid = online_trainer.predict_residual(params, inp_s, net_cfg,
+                                                lowering=config.lowering)
         enh = _apply_enhancement(rec_s, resid, eb, x_s.dtype, stats, config)
         samples.append(metrics.psnr(x_s, enh))
 
@@ -320,7 +332,8 @@ def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats,
         # fused entry.
         stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
                                          batch=config.conv_batch,
-                                         bounds=resolved, telemetry=tel)
+                                         bounds=resolved, telemetry=tel,
+                                         lowering=config.lowering)
         conv = stage.run(fields)
         conv_arcs = {n: arc for n, (arc, _) in conv.items()}
         recs = {n: rec for n, (_, rec) in conv.items()}
@@ -368,7 +381,8 @@ def _compress_serial(fields, rel_eb, *, abs_eb, config, collect_stats,
                         reason = faults_lib.degrade_reason()
                     else:
                         resid_norm = online_trainer.predict_residual(
-                            params, inputs, net_cfg)
+                            params, inputs, net_cfg,
+                            lowering=fcfg.lowering)
                         entry = pack_entry(fcfg, conv_arcs[name], params,
                                            stats, aux_names, eb, net_cfg,
                                            history, collect_stats)

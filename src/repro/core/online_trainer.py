@@ -36,6 +36,7 @@ class TrainConfig:
     seed: int = 0
     slice_axis: int = 0
     loss: str = "mse"          # "mse" | "l1"
+    lowering: str = "auto"     # eager | jit | pallas | auto (kernel dispatch)
 
 
 def normalize_stats(decomp: np.ndarray) -> tuple[float, float]:
@@ -80,16 +81,18 @@ def epoch_batches(epoch_key, n: int, steps: int, batch: int):
     return perm.reshape(steps, batch)
 
 
-def batch_loss(params, xb, yb, *, regulated, skip, loss):
+def batch_loss(params, xb, yb, *, regulated, skip, loss, lowering="auto"):
     """Mini-batch training loss — single definition for every engine."""
-    pred = skipping_dnn.forward(params, xb, regulated=regulated, skip=skip)
+    pred = skipping_dnn.forward(params, xb, regulated=regulated, skip=skip,
+                                lowering=lowering)
     if loss == "l1":
         return jnp.mean(jnp.abs(pred - yb))
     return jnp.mean(jnp.square(pred - yb))
 
 
 def scan_train(params, opt_state, inputs, targets, batches, start_step, *,
-               cfg_reg, cfg_skip, total_steps, base_lr, min_lr_frac, loss):
+               cfg_reg, cfg_skip, total_steps, base_lr, min_lr_frac, loss,
+               lowering="auto"):
     """SGD scan over ``batches`` ``[S, batch]`` — the trace shared by the
     serial trainer (one epoch per dispatch) and the batched engine (every
     epoch of every field of a group in one dispatch).  Sharing the exact
@@ -99,7 +102,7 @@ def scan_train(params, opt_state, inputs, targets, batches, start_step, *,
 
     def loss_fn(p, xb, yb):
         return batch_loss(p, xb, yb, regulated=cfg_reg, skip=cfg_skip,
-                          loss=loss)
+                          loss=loss, lowering=lowering)
 
     def body(carry, idx):
         p, s, step = carry
@@ -117,23 +120,24 @@ def scan_train(params, opt_state, inputs, targets, batches, start_step, *,
 
 def epoch_core(params, opt_state, inputs, targets, epoch_key, start_step, *,
                cfg_reg, cfg_skip, batch, steps, total_steps, base_lr,
-               min_lr_frac, loss):
+               min_lr_frac, loss, lowering="auto"):
     """One epoch of online learning for a single field."""
     batches = epoch_batches(epoch_key, inputs.shape[0], steps, batch)
     params, opt_state, losses = scan_train(
         params, opt_state, inputs, targets, batches, start_step,
         cfg_reg=cfg_reg, cfg_skip=cfg_skip, total_steps=total_steps,
-        base_lr=base_lr, min_lr_frac=min_lr_frac, loss=loss)
+        base_lr=base_lr, min_lr_frac=min_lr_frac, loss=loss,
+        lowering=lowering)
     return params, opt_state, jnp.mean(losses)
 
 
 _train_epoch = partial(jax.jit, static_argnames=(
     "cfg_reg", "cfg_skip", "batch", "steps", "total_steps", "base_lr",
-    "min_lr_frac", "loss"))(epoch_core)
+    "min_lr_frac", "loss", "lowering"))(epoch_core)
 
 
 def predict_graph(params, xs, *, regulated: bool, skip: bool,
-                  batch: int = 64):
+                  batch: int = 64, lowering: str = "auto"):
     """Enhancer inference over all slices, chunked exactly like
     :func:`predict_residual` so both engines emit the same values; returns
     ``[N, H, W]``.  Traceable — the batched engine inlines one copy per field
@@ -141,7 +145,8 @@ def predict_graph(params, xs, *, regulated: bool, skip: bool,
     outs = []
     for i in range(0, xs.shape[0], batch):
         out = skipping_dnn.forward(params, xs[i:i + batch],
-                                   regulated=regulated, skip=skip)
+                                   regulated=regulated, skip=skip,
+                                   lowering=lowering)
         outs.append(out[..., 0])
     return jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
 
@@ -176,21 +181,23 @@ def train(params, inputs: np.ndarray, targets: np.ndarray, cfg: TrainConfig,
             params, opt_state, xs, ys, ekey, start_step,
             cfg_reg=net_cfg.regulated, cfg_skip=net_cfg.skip, batch=batch,
             steps=steps, total_steps=total_steps, base_lr=cfg.lr,
-            min_lr_frac=cfg.min_lr_frac, loss=cfg.loss)
+            min_lr_frac=cfg.min_lr_frac, loss=cfg.loss,
+            lowering=cfg.lowering)
         history.append(float(mloss))
         if on_epoch is not None:
             on_epoch(e, params, history[-1])
     return params, opt_state, history
 
 
-_predict = partial(jax.jit, static_argnames=("regulated", "skip", "batch"))(
-    predict_graph)
+_predict = partial(jax.jit, static_argnames=("regulated", "skip", "batch",
+                                             "lowering"))(predict_graph)
 
 
 def predict_residual(params, inputs: np.ndarray,
                      net_cfg: skipping_dnn.SkippingDNNConfig,
-                     batch: int = 64) -> np.ndarray:
+                     batch: int = 64, lowering: str = "auto") -> np.ndarray:
     """Predicted normalized residual for every slice, [N,H,W]."""
     return np.asarray(_predict(params, jnp.asarray(inputs),
                                regulated=net_cfg.regulated,
-                               skip=net_cfg.skip, batch=batch))
+                               skip=net_cfg.skip, batch=batch,
+                               lowering=lowering))

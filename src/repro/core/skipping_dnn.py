@@ -12,9 +12,29 @@ Output heads (§3.3.2, Fig. 6):
     residual target is normalized by the error bound, the enhanced value can
     exactly reach the original (balanced regulation, Case B) while the total
     error stays ≤ 2×eb.
-  * ``unregulated`` — linear head, no bound (the paper's ablation).
+  * ``skip=False`` gives the non-skipping ablation of Fig. 4 (same depth).
 
-``skip=False`` gives the non-skipping ablation of Fig. 4 (same depth).
+Forward formulation (the bit-stable fast path)
+----------------------------------------------
+These convs are XLA's worst case: 3×3 kernels over 1–16 channels lower to
+``conv_general_dilated`` programs that run ~3 GFLOP/s on CPU.  The forward
+here instead expresses every conv as an accumulation of nine shifted
+``jax.lax.dot_general`` contractions (one GEMM per kernel tap) and every
+stride-2 transpose conv as its sub-pixel decomposition — four parity planes,
+each a small accumulation of taps on the un-dilated grid, interleaved back.
+All contractions are pinned to ``precision=HIGHEST``, additions happen in a
+fixed tap order, and single-output-channel convs are padded to two columns
+(a ``(K, 1)`` GEMV re-associates under ``vmap`` where a ``(K, 2)`` GEMM does
+not), which makes the forward **byte-identical** under eager, ``jit``,
+``vmap``-over-fields and grad — the property the batched engine's stacked
+strategy and the conv-stage jit path rely on (tests/test_lowering.py).
+It is also 2–3× faster than the XLA conv lowering on CPU (bench_kernels
+``kernel/dnn_forward`` row).
+
+The historical XLA formulation is kept as :func:`forward_reference` — the
+accuracy oracle and the perf baseline; it is *not* bit-identical to
+:func:`forward` (different contraction order), which is why PR 9 swapped the
+formulation for every path at once instead of dispatching between them.
 """
 from __future__ import annotations
 
@@ -25,7 +45,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import dispatch
+
 _DN = ("NHWC", "HWIO", "NHWC")
+_P = jax.lax.Precision.HIGHEST
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,21 +114,103 @@ def unstack_params(stacked, num_fields: int):
             for i in range(num_fields)]
 
 
+# ---------------------------------------------------------------------------
+# Fast bit-stable formulation: convs as accumulated shifted GEMMs
+# ---------------------------------------------------------------------------
+
+def _dot(a, w):
+    """Contract ``a``'s channel axis with ``w [cin, cout]``; one GEMM,
+    precision pinned so the reduction is never FMA-contracted or split."""
+    return jax.lax.dot_general(a, w, (((a.ndim - 1,), (0,)), ((), ())),
+                               precision=_P)
+
+
+def _conv_taps(x, w, b, stride):
+    """SAME 3×3 conv as nine shifted ``_dot`` accumulations, fixed tap order."""
+    n, h, wd, cin = x.shape
+    ho = (h + stride - 1) // stride
+    wo = (wd + stride - 1) // stride
+
+    def pads(size, out):
+        total = max((out - 1) * stride + 3 - size, 0)
+        lo = total // 2
+        return lo, total - lo
+
+    ylo, yhi = pads(h, ho)
+    xlo, xhi = pads(wd, wo)
+    xp = jnp.pad(x, ((0, 0), (ylo, yhi), (xlo, xhi), (0, 0)))
+    acc = None
+    for dy in range(3):
+        for dx in range(3):
+            win = jax.lax.slice(
+                xp, (0, dy, dx, 0),
+                (n, dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1,
+                 cin),
+                (1, stride, stride, 1))
+            t = _dot(win, w[dy, dx])
+            acc = t if acc is None else acc + t
+    return acc + b
+
+
 def _conv(x, p, stride=1):
+    w, b = p["w"], p["b"]
+    cout = w.shape[-1]
+    if cout == 1:
+        # A (K, 1) contraction lowers to a GEMV whose batched form under
+        # vmap re-associates the reduction; a zero-padded (K, 2) GEMM lowers
+        # identically in both — the sole source of vmap bit-divergence.
+        w = jnp.concatenate([w, jnp.zeros_like(w)], axis=-1)
+        b = jnp.concatenate([b, jnp.zeros_like(b)])
+        return _conv_taps(x, w, b, stride)[..., :1]
+    return _conv_taps(x, w, b, stride)
+
+
+def _deconv(x, p):
+    """Stride-2 SAME 3×3 transpose conv via sub-pixel decomposition.
+
+    ``conv_transpose(k=3, s=2, SAME)`` ≡ zero-dilate + pad (2, 1) + VALID
+    conv with the unflipped kernel, so output row ``2i+py`` only sees input
+    rows through kernel taps ``dy ∈ {py, py+2} ∩ [0, 2]`` — each parity
+    plane is a tiny accumulation on the *small* grid, interleaved back.
+    """
+    w, b = p["w"], p["b"]
+    n, h, wd, cin = x.shape
+    cout = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    out = jnp.zeros((n, 2 * h, 2 * wd, cout), x.dtype)
+    for py in range(2):
+        ytaps = [(py, py - 1)] + ([(py + 2, py)] if py + 2 <= 2 else [])
+        for px in range(2):
+            xtaps = [(px, px - 1)] + ([(px + 2, px)] if px + 2 <= 2 else [])
+            acc = None
+            for dy, my in ytaps:
+                for dx, mx in xtaps:
+                    win = jax.lax.slice(xp, (0, my + 1, mx + 1, 0),
+                                        (n, my + 1 + h, mx + 1 + wd, cin))
+                    t = _dot(win, w[dy, dx])
+                    acc = t if acc is None else acc + t
+            out = out.at[:, py::2, px::2, :].set(acc)
+    return out + b
+
+
+# ---------------------------------------------------------------------------
+# Historical XLA formulation — accuracy oracle + perf baseline
+# ---------------------------------------------------------------------------
+
+def _conv_xla(x, p, stride=1):
     y = jax.lax.conv_general_dilated(
         x, p["w"], window_strides=(stride, stride), padding="SAME",
         dimension_numbers=_DN)
     return y + p["b"]
 
 
-def _deconv(x, p):
+def _deconv_xla(x, p):
     y = jax.lax.conv_transpose(
         x, p["w"], strides=(2, 2), padding="SAME", dimension_numbers=_DN)
     return y + p["b"]
 
 
-@partial(jax.jit, static_argnames=("regulated", "skip"))
-def forward(params, x, *, regulated: bool = True, skip: bool = True):
+def _forward_core(params, x, *, regulated, skip, conv, deconv):
     """x: [N, H, W, C_in] normalized decompressed slices -> [N, H, W, 1]
     normalized residual prediction.  H, W are padded to multiples of 16
     internally (replicate edges) and cropped back."""
@@ -115,33 +220,98 @@ def forward(params, x, *, regulated: bool = True, skip: bool = True):
         x = jnp.pad(x, ((0, 0), (0, ph), (0, pw), (0, 0)), mode="edge")
 
     act = jax.nn.relu
-    f0 = act(_conv(x, params["conv_in"]))          # H
-    f1 = act(_conv(f0, params["down1"], stride=2))  # H/2
-    f2 = act(_conv(f1, params["down2"], stride=2))  # H/4
-    f3 = act(_conv(f2, params["down3"], stride=2))  # H/8
-    f4 = act(_conv(f3, params["down4"], stride=2))  # H/16
+    f0 = act(conv(x, params["conv_in"]))          # H
+    f1 = act(conv(f0, params["down1"], stride=2))  # H/2
+    f2 = act(conv(f1, params["down2"], stride=2))  # H/4
+    f3 = act(conv(f2, params["down3"], stride=2))  # H/8
+    f4 = act(conv(f3, params["down4"], stride=2))  # H/16
 
-    u = act(_deconv(f4, params["up1"]))             # H/8
+    u = act(deconv(f4, params["up1"]))             # H/8
     if skip:
         u = jnp.concatenate([u, f3], axis=-1)
-    u = act(_deconv(u, params["up2"]))              # H/4
+    u = act(deconv(u, params["up2"]))              # H/4
     if skip:
         u = jnp.concatenate([u, f2], axis=-1)
-    u = act(_deconv(u, params["up3"]))              # H/2
+    u = act(deconv(u, params["up3"]))              # H/2
     if skip:
         u = jnp.concatenate([u, f1], axis=-1)
-    u = act(_deconv(u, params["up4"]))              # H
+    u = act(deconv(u, params["up4"]))              # H
     if skip:
         u = jnp.concatenate([u, f0], axis=-1)
-    z = _conv(u, params["conv_out"])                # [N,H,W,1]
+    z = conv(u, params["conv_out"])                # [N,H,W,1]
 
     if regulated:
-        out = 2.0 * jax.nn.sigmoid(z) - 1.0         # (−1, 1): balanced 2×eb regulation
+        out = 2.0 * jax.nn.sigmoid(z) - 1.0        # (−1, 1): balanced 2×eb regulation
     else:
         out = z
     if ph or pw:
         out = out[:, :h, :w, :]
     return out
+
+
+@partial(jax.jit, static_argnames=("regulated", "skip"))
+def _forward_fast(params, x, *, regulated: bool = True, skip: bool = True):
+    return _forward_core(params, x, regulated=regulated, skip=skip,
+                         conv=_conv, deconv=_deconv)
+
+
+@partial(jax.jit, static_argnames=("regulated", "skip"))
+def forward_reference(params, x, *, regulated: bool = True,
+                      skip: bool = True):
+    """The pre-PR9 XLA-conv forward.  Numerically ~1e-6-close to
+    :func:`forward` but NOT bit-identical; kept as the accuracy oracle and
+    the ``kernel/dnn_forward`` bench baseline."""
+    return _forward_core(params, x, regulated=regulated, skip=skip,
+                         conv=_conv_xla, deconv=_deconv_xla)
+
+
+def _forward_pallas(params, x, *, regulated: bool = True, skip: bool = True):
+    """Conv layers through the ``conv2d3x3`` Pallas kernel (TPU target);
+    transpose convs stay on the sub-pixel formulation.  Only engaged when
+    the parity probe proves it byte-identical to :func:`_forward_fast` on
+    this backend."""
+    from ..kernels import ops as kernel_ops
+
+    def conv(xx, p, stride=1):
+        return kernel_ops.conv3x3(xx, p["w"], p["b"], stride=stride,
+                                  relu=False)
+
+    return _forward_core(params, x, regulated=regulated, skip=skip,
+                         conv=conv, deconv=_deconv)
+
+
+def _pallas_probe() -> bool:
+    cfg = SkippingDNNConfig(c_in=1)
+    params = init_params(jax.random.PRNGKey(7), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 17, 13, 1), jnp.float32)
+    want = np.asarray(_forward_fast(params, x, regulated=True, skip=True))
+    got = np.asarray(_forward_pallas(params, x, regulated=True, skip=True))
+    return want.tobytes() == got.tobytes()
+
+
+def forward(params, x, *, regulated: bool = True, skip: bool = True,
+            lowering: str = "auto"):
+    """Skipping-DNN forward under the requested lowering.
+
+    ``eager`` and ``jit`` are the *same* compiled bit-stable fast
+    formulation (it is jit-safe by construction — HIGHEST-precision GEMMs
+    in a fixed accumulation order leave XLA nothing to contract), so the
+    eager/jit byte-identity half of the contract holds structurally;
+    ``pallas`` routes the convs through the hand-written kernel where the
+    parity probe passes (TPU), falling back here otherwise.  Traceable:
+    resolution happens at trace time, so callers may close over a fixed
+    ``lowering`` inside their own jit/scan.
+    """
+    if lowering in ("eager", "jit"):
+        return _forward_fast(params, x, regulated=regulated, skip=skip)
+    impl, _ = dispatch.resolve("dnn_forward", lowering)
+    return impl(params, x, regulated=regulated, skip=skip)
+
+
+dispatch.register("dnn_forward", "eager", _forward_fast)
+dispatch.register("dnn_forward", "jit", _forward_fast)
+dispatch.register("dnn_forward", "pallas", _forward_pallas,
+                  probe=_pallas_probe, backends=("tpu",))
 
 
 def apply(params, x, cfg: SkippingDNNConfig):

@@ -6,26 +6,30 @@ validates them by executing the kernel body in Python).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import dispatch
 from .conv2d3x3 import conv2d3x3
 from .fused_enhance import fused_enhance
 from .lorenzo3d import lorenzo3d_fwd, lorenzo3d_inv
 
 
 def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    # Cached process-wide probe (dispatch.force_backend overrides in tests)
+    # instead of a per-call jax.default_backend() sniff.
+    return dispatch.backend() == "tpu"
 
 
 def _pick_tz(d: int, h: int, w: int, itemsize: int = 4,
              vmem_budget: int = 12 * 2**20) -> int:
     """Largest power-of-two slab depth whose working set (~4 slabs: two
-    inputs + two outputs) fits the VMEM budget and divides d."""
+    inputs + two outputs) fits the VMEM budget.  Depths that are not a
+    multiple get padded up by the wrappers and cropped after — a ragged
+    depth no longer degrades the grid to one plane per step."""
     tz = 1
     for cand in (2, 4, 8, 16, 32):
-        if d % cand == 0 and 4 * cand * h * w * itemsize <= vmem_budget:
+        if cand <= d and 4 * cand * h * w * itemsize <= vmem_budget:
             tz = cand
     return tz
 
@@ -76,15 +80,31 @@ def enhance(z, decomp, orig, eb: float, *, regulated: bool = True,
     z2, d2, o2 = (a.reshape(rows, w) for a in (z, decomp, orig))
     tr = 1
     for cand in (8, 32, 128, 256):
-        if rows % cand == 0 and cand * w * 4 * 5 <= 12 * 2**20:
+        if cand <= rows and cand * w * 4 * 5 <= 12 * 2**20:
             tr = cand
+    pad = (-rows) % tr
+    if pad:
+        # Elementwise op: zero rows compute garbage that is cropped below.
+        z2, d2, o2 = (jnp.concatenate(
+            [a, jnp.zeros((pad, w), a.dtype)], axis=0) for a in (z2, d2, o2))
     out, mask = fused_enhance(z2, d2, o2, eb, regulated=regulated,
                               strict=strict, tr=tr, interpret=interpret)
-    return out.reshape(shape), mask.reshape(shape)
+    return out[:rows].reshape(shape), mask[:rows].reshape(shape)
 
 
 def conv3x3(x, w, b, *, stride: int = 1, relu: bool = True,
             interpret: bool | None = None):
     interpret = (not _on_tpu()) if interpret is None else interpret
-    return conv2d3x3(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
-                     stride=stride, relu=relu, interpret=interpret)
+    x, w, b = jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)
+    cout = w.shape[-1]
+    pad = cout % 2
+    if pad:
+        # Odd output-channel counts (the network head is C_out=1) lower as a
+        # GEMV; pad to an even C_out so every contraction is the same batched
+        # GEMM shape, then crop.  Exact: padded channels are computed and
+        # sliced off, kept channels are untouched.
+        w = jnp.concatenate([w, jnp.zeros(w.shape[:-1] + (pad,), w.dtype)],
+                            axis=-1)
+        b = jnp.concatenate([b, jnp.zeros((pad,), b.dtype)])
+    out = conv2d3x3(x, w, b, stride=stride, relu=relu, interpret=interpret)
+    return out[..., :cout] if pad else out

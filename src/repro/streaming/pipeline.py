@@ -28,7 +28,8 @@ compression as a dataflow with a hard residency budget:
   bounded queue.
 
 Training and packing go through the exact serial-engine helpers (the
-batched engine's ``unroll`` strategy), so streamed archive entries are
+batched engine's group dispatch, whose strategies are all byte-identical
+to serial for the groups they accept), so streamed archive entries are
 bit-identical to ``engine="serial"`` output.
 """
 from __future__ import annotations
@@ -369,7 +370,8 @@ def compress(source, sink, rel_eb: float | None = None, *,
         # already charged).
         stage = conv_stage_lib.ConvStage(config.compressor, rel_eb, abs_eb,
                                          batch=config.conv_batch,
-                                         bounds=resolved, telemetry=tel)
+                                         bounds=resolved, telemetry=tel,
+                                         lowering=config.lowering)
         want_traces = tel.enabled and tel.config.learning_traces
 
         def group_cost(group) -> dict[str, int]:

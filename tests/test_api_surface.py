@@ -67,7 +67,8 @@ SIGNATURES = {
         "mode='strict', epochs=100, batch=10, lr=0.01, seed=0, slice_axis=0,"
         " skip=True, learn_residual=True, cross_field={}, "
         "weight_dtype='float32', widths=(4, 4, 6, 6, 8), engine='serial', "
-        "conv_batch=True, field_batching='unroll', group_size=2, "
+        "conv_batch=True, field_batching='auto', lowering='auto', "
+        "group_size=2, "
         "prefetch=True, field_shard=True, max_resident_bytes=0, "
         "telemetry=None, faults=None), "
         "collect_stats: 'bool' = True, bounds=None) -> 'dict'",

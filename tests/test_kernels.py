@@ -70,3 +70,119 @@ def test_conv3x3_sweep(hw, cin, cout, stride):
                            stride=stride)
     assert y.shape == yr.shape
     assert np.allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Oracle parity matrix: every kernel x dtype x shape-class (x regulation
+# mode where it applies), each cell checked against the ref.py oracle.
+# "even" shapes hit the aligned fast path, "odd"/"ragged" (prime extents)
+# force the wrappers' explicit pad/crop.
+# ---------------------------------------------------------------------------
+
+SHAPES3D = {"even": (8, 16, 16), "odd": (7, 15, 33), "ragged": (17, 9, 11)}
+DTYPES = [np.float32, np.float64]
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "f64"])
+@pytest.mark.parametrize("cls", sorted(SHAPES3D))
+def test_parity_matrix_lorenzo(cls, dtype):
+    shape = SHAPES3D[cls]
+    x = np.cumsum(RNG.standard_normal(shape), axis=0).astype(dtype)
+    d, rec = ops.lorenzo_quantize(x, 1e-2)
+    assert d.shape == shape and rec.shape == shape
+    x32 = jnp.asarray(x.astype(np.float32))   # kernel computes in fp32
+    d_r, rec_r = ref.lorenzo3d_fwd_ref(x32, 1e-2)
+    assert np.array_equal(np.asarray(d), np.asarray(d_r))
+    assert np.allclose(np.asarray(rec), np.asarray(rec_r), atol=1e-6)
+    q = ops.lorenzo_dequantize(d, 1e-2)
+    q_r = ref.lorenzo3d_inv_ref(d_r).astype(jnp.float32) * (2.0 * 1e-2)
+    assert q.shape == shape
+    assert np.allclose(np.asarray(q), np.asarray(q_r), atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "f64"])
+@pytest.mark.parametrize("cls", sorted(SHAPES3D))
+@pytest.mark.parametrize("strict", [True, False], ids=["strict", "relaxed"])
+def test_parity_matrix_enhance(cls, dtype, strict):
+    shape = SHAPES3D[cls]
+    eb = 0.05
+    z = RNG.standard_normal(shape).astype(np.float32)
+    dec = RNG.standard_normal(shape).astype(dtype)
+    orig = (dec + RNG.uniform(-eb, eb, shape)).astype(dtype)
+    out, mask = ops.enhance(z, dec, orig, eb, regulated=True, strict=strict)
+    assert out.shape == shape and mask.shape == shape
+    out_r, mask_r = ref.fused_enhance_ref(jnp.asarray(z), jnp.asarray(dec),
+                                          jnp.asarray(orig), eb,
+                                          regulated=True, strict=strict)
+    assert np.allclose(np.asarray(out), np.asarray(out_r),
+                       rtol=2e-5, atol=1e-6)
+    assert (np.asarray(mask) != np.asarray(mask_r)).mean() < 1e-2
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "f64"])
+@pytest.mark.parametrize("cls,hw,cout", [("even", (16, 16), 4),
+                                         ("odd", (15, 33), 6),
+                                         ("ragged", (17, 11), 1)])
+def test_parity_matrix_conv3x3(cls, hw, cout, dtype):
+    h, w_ = hw
+    x = RNG.standard_normal((2, h, w_, 4)).astype(dtype)
+    w = (RNG.standard_normal((3, 3, 4, cout)) * 0.2).astype(np.float32)
+    b = (RNG.standard_normal((cout,)) * 0.1).astype(np.float32)
+    y = ops.conv3x3(x, w, b, relu=False)
+    yr = ref.conv2d3x3_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                           relu=False)
+    assert y.shape == yr.shape == (2, h, w_, cout)
+    assert np.allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pad/crop regressions: non-multiple shapes must engage a real tile (not
+# degrade to tile=1) and crop back exactly.
+# ---------------------------------------------------------------------------
+
+def test_pick_tz_ragged_depth_uses_real_tile():
+    # Prime depth: before the pad/crop fix this degraded to tz=1 (one grid
+    # step per plane); now the largest fitting slab is chosen and the depth
+    # is padded up to it.
+    assert ops._pick_tz(17, 16, 16) > 1
+    assert ops._pick_tz(1, 16, 16) == 1   # never exceeds the depth
+
+
+def test_lorenzo_pad_crop_regression():
+    eb = 1e-2
+    x = np.cumsum(RNG.standard_normal((17, 9, 11)), axis=0).astype(np.float32)
+    d, rec = ops.lorenzo_quantize(x, eb)
+    # aligned reference computation: pad manually to the tile, crop after
+    d_a, rec_a = ref.lorenzo3d_fwd_ref(jnp.asarray(x), eb)
+    assert np.array_equal(np.asarray(d), np.asarray(d_a))
+    assert np.array_equal(np.asarray(rec), np.asarray(rec_a))
+    q = ops.lorenzo_dequantize(d, eb)
+    assert q.shape == x.shape
+    assert np.abs(np.asarray(q) - x).max() <= eb * (1 + 1e-6)
+
+
+def test_enhance_pad_crop_regression():
+    eb = 0.02
+    shape = (7, 13, 5)   # rows = 91 (prime-ish): engages the row pad
+    z = RNG.standard_normal(shape).astype(np.float32)
+    dec = RNG.standard_normal(shape).astype(np.float32)
+    orig = (dec + RNG.uniform(-eb, eb, shape)).astype(np.float32)
+    out, mask = ops.enhance(z, dec, orig, eb)
+    out_r, mask_r = ref.fused_enhance_ref(jnp.asarray(z), jnp.asarray(dec),
+                                          jnp.asarray(orig), eb)
+    assert out.shape == mask.shape == shape
+    assert np.allclose(np.asarray(out), np.asarray(out_r),
+                       rtol=2e-5, atol=1e-6)
+    assert np.array_equal(np.asarray(mask), np.asarray(mask_r))
+
+
+def test_conv3x3_odd_cout_pad_crop_regression():
+    # C_out=1 (the network head): padded to an even GEMM shape and cropped.
+    x = RNG.standard_normal((3, 10, 12, 4)).astype(np.float32)
+    w = (RNG.standard_normal((3, 3, 4, 1)) * 0.2).astype(np.float32)
+    b = np.zeros((1,), np.float32)
+    y = ops.conv3x3(x, w, b, relu=False)
+    yr = ref.conv2d3x3_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                           relu=False)
+    assert y.shape == (3, 10, 12, 1)
+    assert np.allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
