@@ -1,0 +1,102 @@
+"""Serving-tier benchmarks (``repro.serve``): cold vs warm decode latency,
+coalesced vs serial dispatch throughput, transcode wall-clock under a
+residency budget.
+
+The ``serving/coalesced_burst`` row doubles as a regression **guard**: a
+burst of same-signature requests must execute in strictly fewer decode
+dispatches than requests (the stacked ``decompress_batched`` path) — if
+the server ever degrades to one dispatch per request, the run fails.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro import core, streaming
+from repro.serve import ArchiveServer, transcode
+from repro.streaming.pipeline import ResidencyLedger
+
+from . import common
+
+
+def _build(path: str, fields, epochs: int):
+    cfg = core.NeurLZConfig(engine="streaming", epochs=epochs)
+    streaming.compress(fields, path, rel_eb=1e-3, config=cfg)
+    return cfg
+
+
+def run(full: bool = False, smoke: bool = False):
+    shape = (8, 16, 16) if smoke else ((32, 48, 48) if full else (16, 32, 32))
+    epochs = 2 if smoke else 5
+    nfields = 4 if smoke else 6
+    reps = 5 if smoke else 20
+    fields = common.snapshot_fields(nfields, shape=shape)
+    names = list(fields)
+    tmp = tempfile.mkdtemp(prefix="bench-serving-")
+    path = os.path.join(tmp, "snap.nlzs")
+    _build(path, fields, epochs)
+
+    # -- cold vs warm decode latency (the cache's reason to exist) ----------
+    with ArchiveServer(path, max_bytes=1 << 30) as srv:
+        t0 = time.perf_counter()
+        srv.decode(names[0], timeout=600)
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            srv.decode(names[0], timeout=600)
+        warm_s = (time.perf_counter() - t0) / reps
+    common.csv_row("serving/decode_cold", cold_s * 1e6,
+                   f"warm_us={warm_s * 1e6:.1f};"
+                   f"warm_speedup={cold_s / max(warm_s, 1e-9):.1f}")
+
+    # -- coalesced burst vs serial requests ---------------------------------
+    srv = ArchiveServer(path, max_bytes=1 << 30, auto_start=False)
+    futs = [srv.submit(n) for n in names]
+    t0 = time.perf_counter()
+    srv.start()
+    for f in futs:
+        f.result(600)
+    coalesced_s = time.perf_counter() - t0
+    stats = srv.decode_stats
+    srv.close()
+    if stats.dispatches >= len(names):
+        raise RuntimeError(
+            f"serving coalesce guard: {stats.dispatches} decode dispatches "
+            f"for {len(names)} same-signature concurrent requests — the "
+            "batching window degraded to per-request dispatch")
+
+    # serial reference: same fields, one request per batch, cache disabled
+    # (1-byte ceiling rejects every insertion) so each decode is cold
+    with ArchiveServer(path, max_bytes=1, window_s=0.0) as srv2:
+        t0 = time.perf_counter()
+        for n in names:
+            srv2.decode(n, timeout=600)
+        serial_s = time.perf_counter() - t0
+    common.csv_row(
+        "serving/coalesced_burst", coalesced_s * 1e6 / len(names),
+        f"serial_us_per_req={serial_s * 1e6 / len(names):.1f};"
+        f"dispatches={stats.dispatches};requests={len(names)};"
+        f"max_width={stats.max_width};"
+        f"speedup={serial_s / max(coalesced_s, 1e-9):.2f}")
+
+    # -- transcode wall-clock vs residency budget ---------------------------
+    budget = 32 << 20
+    ledger = ResidencyLedger(budget)
+    dst = os.path.join(tmp, "requal.nlzs")
+    cfg = core.NeurLZConfig(engine="streaming", epochs=epochs)
+    t0 = time.perf_counter()
+    out = transcode(path, dst, rel_eb=1e-2, config=cfg, ledger=ledger)
+    wall_s = time.perf_counter() - t0
+    peak = out.report["peak_resident_bytes"]
+    out.close()
+    if peak > budget:
+        raise RuntimeError(
+            f"serving transcode guard: peak resident {peak} exceeded the "
+            f"{budget}-byte ledger budget")
+    common.csv_row(
+        "serving/transcode", wall_s * 1e6,
+        f"fields={len(names)};peak_resident_mb={peak / 2**20:.1f};"
+        f"budget_mb={budget / 2**20:.0f};"
+        f"src_bytes={os.path.getsize(path)};"
+        f"dst_bytes={os.path.getsize(dst)}")

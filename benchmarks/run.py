@@ -29,6 +29,7 @@ MODULES = [
     "bench_streaming",          # bounded-memory pipeline vs in-memory engine
     "bench_obs",                # telemetry overhead guard + Perfetto trace
     "bench_durability",         # NLZSTRM2 checksum cost + salvage scan
+    "bench_serving",            # serving tier: cache, coalesce, transcode
 ]
 
 
@@ -42,12 +43,13 @@ MODULES_SMOKE = [
     "bench_streaming",
     "bench_obs",
     "bench_durability",
+    "bench_serving",
 ]
 
 # Committed perf ledger (repo root): the smoke profile's machine-readable
 # run record; scripts/perf_summary.py --compare diffs two of these and
 # fails on >25% wall-clock regression.
-LEDGER = "BENCH_PR9.json"
+LEDGER = "BENCH_PR10.json"
 
 
 def main() -> None:

@@ -65,14 +65,19 @@ def compare_ledgers(old_path: str, new_path: str,
     """
     old = {r["name"]: r for r in json.load(open(old_path))["rows"]}
     new = {r["name"]: r for r in json.load(open(new_path))["rows"]}
-    regressed = 0
+    regressed = added = removed = 0
     print(f"{'row':44s} {'old_us':>12s} {'new_us':>12s} {'delta':>8s}")
     for name, nr in new.items():
         orow = old.get(name)
+        n = float(nr.get("us_per_call") or 0.0)
         if orow is None:
-            print(f"{name:44s} {'(new)':>12s} {nr['us_per_call']:12.1f}")
+            # Present only in the new ledger (a benchmark module grew a
+            # row, or a new module joined --smoke): informational, never a
+            # failure — first comparison against an old ledger must pass.
+            added += 1
+            print(f"{name:44s} {'(added)':>12s} {n:12.1f}")
             continue
-        o, n = orow["us_per_call"], nr["us_per_call"]
+        o = float(orow.get("us_per_call") or 0.0)
         if o <= 0.0 or n <= 0.0:
             continue
         delta = 100.0 * (n - o) / o
@@ -81,9 +86,13 @@ def compare_ledgers(old_path: str, new_path: str,
             regressed += 1
             flag = f"  << REGRESSION (> {threshold_pct:g}%)"
         print(f"{name:44s} {o:12.1f} {n:12.1f} {delta:+7.1f}%{flag}")
-    for name in old:
+    for name, orow in old.items():
         if name not in new:
-            print(f"{name:44s} (dropped)")
+            removed += 1
+            o = float(orow.get("us_per_call") or 0.0)
+            print(f"{name:44s} {o:12.1f} {'(removed)':>12s}")
+    if added or removed:
+        print(f"\n{added} row(s) added, {removed} removed (informational)")
     if regressed:
         print(f"\n{regressed} row(s) regressed past {threshold_pct:g}% "
               "wall-clock")

@@ -32,14 +32,16 @@ cheap and does not flip the x64 switch; touching any of these loads
                               injection, retry + backoff, degradation)
     CorruptArchiveError       typed container-corruption error (with the
                               failing byte offset)
+    ArchiveServer / transcode serving tier (``repro.serve``; coalesced
+                              concurrent decode + bound re-targeting)
     open(path)                Archive.open convenience
 """
 __version__ = "1.0.0"
 
-__all__ = ["NeurLZ", "Archive", "ErrorBound", "ModelConfig", "EngineConfig",
-           "RegulationConfig", "NeurLZConfig", "Telemetry", "TelemetryConfig",
-           "FaultConfig", "FaultInjector", "InjectedFault", "RetryPolicy",
-           "CorruptArchiveError", "open"]
+__all__ = ["NeurLZ", "Archive", "ArchiveServer", "ErrorBound", "ModelConfig",
+           "EngineConfig", "RegulationConfig", "NeurLZConfig", "Telemetry",
+           "TelemetryConfig", "FaultConfig", "FaultInjector", "InjectedFault",
+           "RetryPolicy", "CorruptArchiveError", "open", "transcode"]
 
 _API = frozenset(__all__)   # every lazy attribute resolves via repro.api
 

@@ -29,6 +29,7 @@ the engines still consume the flat dataclass; :func:`join_config` /
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Mapping
 
 from . import faults as faults_lib
@@ -219,6 +220,8 @@ class NeurLZ:
         settings would break the determinism contract).
         """
         from .streaming import pipeline
+        if isinstance(sink, os.PathLike):
+            sink = os.fspath(sink)
         cfg = self.config
         if cfg.engine != "streaming":
             cfg = dataclasses.replace(cfg, engine="streaming")
@@ -261,10 +264,23 @@ def open(path) -> Archive:  # noqa: A001 - deliberate, repro.open(path)
     return Archive.open(path)
 
 
-__all__ = ["NeurLZ", "Archive", "ErrorBound", "ModelConfig", "EngineConfig",
-           "RegulationConfig", "NeurLZConfig", "Telemetry", "TelemetryConfig",
-           "FaultConfig", "FaultInjector", "InjectedFault", "RetryPolicy",
-           "CorruptArchiveError", "join_config", "split_config", "open"]
+def __getattr__(name: str):
+    # The serving tier re-exports lazily: `repro.ArchiveServer` /
+    # `repro.transcode` should not make `import repro.api` (and therefore
+    # every NeurLZ() construction) pay the serve/streaming import chain.
+    if name in ("ArchiveServer", "transcode"):
+        from . import serve
+        value = getattr(serve, name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+
+
+__all__ = ["NeurLZ", "Archive", "ArchiveServer", "ErrorBound", "ModelConfig",
+           "EngineConfig", "RegulationConfig", "NeurLZConfig", "Telemetry",
+           "TelemetryConfig", "FaultConfig", "FaultInjector", "InjectedFault",
+           "RetryPolicy", "CorruptArchiveError", "join_config", "split_config",
+           "open", "transcode"]
 
 # Re-exported for API-surface completeness (resolve_bounds powers the
 # ``bounds=`` argument coercion rules documented above).

@@ -33,6 +33,7 @@ several compressors may share an archive format (``szlike`` and
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable
 
 import numpy as np
@@ -181,7 +182,55 @@ def archive_nbytes(arc: dict) -> int:
     return for_archive(arc).archive_nbytes(arc)
 
 
-def decompress_many(arcs, *, batch: bool = True) -> dict:
+class DecodeStats:
+    """Thread-safe accounting of conventional-decode dispatches.
+
+    Hand an instance to :func:`decompress_many` (``stats=``) and it records
+    how the call actually executed: how many stacked
+    ``decompress_batched`` dispatches ran (``batched``), how many archives
+    decoded one at a time (``single``), the total archives decoded and the
+    widest stacked dispatch seen.  The serving tier's coalescing guarantee
+    — *N same-signature requests execute as one stacked dispatch* — is
+    asserted against these numbers (tests and the ``bench_serving`` smoke
+    guard), so the counters are part of the dispatch contract, not just
+    telemetry.
+    """
+
+    __slots__ = ("_lock", "batched", "single", "archives", "max_width")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.batched = 0        # stacked decompress_batched dispatches
+        self.single = 0         # per-archive decompress calls
+        self.archives = 0       # total archives decoded
+        self.max_width = 0      # widest stacked dispatch
+
+    def note(self, width: int) -> None:
+        with self._lock:
+            self.archives += width
+            if width > 1:
+                self.batched += 1
+                self.max_width = max(self.max_width, width)
+            else:
+                self.single += 1
+
+    @property
+    def dispatches(self) -> int:
+        """Total decode dispatches (stacked + per-archive)."""
+        return self.batched + self.single
+
+    def as_dict(self) -> dict:
+        return {"batched": self.batched, "single": self.single,
+                "dispatches": self.dispatches, "archives": self.archives,
+                "max_width": self.max_width}
+
+    def __repr__(self) -> str:
+        return (f"DecodeStats(batched={self.batched}, single={self.single}, "
+                f"archives={self.archives}, max_width={self.max_width})")
+
+
+def decompress_many(arcs, *, batch: bool = True,
+                    stats: DecodeStats | None = None) -> dict:
     """Decode a set of conventional archives, batching where possible.
 
     ``arcs`` maps name -> archive dict.  Archives whose entry declares
@@ -190,7 +239,9 @@ def decompress_many(arcs, *, batch: bool = True) -> dict:
     Outputs are bit-identical to per-archive :func:`decompress` either way
     (the decode-side mirror of the conv stage's encode contract), so every
     caller — batched-engine decode, streaming ``iter_decompress``, the
-    ``Archive`` handle's random access — may use this unconditionally.
+    ``Archive`` handle's random access, the serving tier — may use this
+    unconditionally.  ``stats`` (a :class:`DecodeStats`) receives one
+    ``note(width)`` per dispatch actually issued.
     """
     out: dict = {}
     groups: dict[tuple, list] = {}
@@ -207,9 +258,13 @@ def decompress_many(arcs, *, batch: bool = True) -> dict:
             recs = entry.decompress_batched([arc for _, arc, _ in members])
             for (name, _, _), rec in zip(members, recs):
                 out[name] = rec
+            if stats is not None:
+                stats.note(len(members))
         else:
             for name, arc, e in members:
                 out[name] = e.decompress(arc)
+                if stats is not None:
+                    stats.note(1)
     return {name: out[name] for name in arcs}
 
 

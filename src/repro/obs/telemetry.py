@@ -256,6 +256,12 @@ class Telemetry:
     def counters(self) -> dict[str, int | float]:
         return {n: c.value for n, c in self._counters.items()}
 
+    def counters_prefixed(self, prefix: str) -> dict[str, int | float]:
+        """Counters whose name starts with ``prefix`` (e.g. ``"serve."``)
+        — lets a subsystem report its own slice of a shared handle."""
+        return {n: c.value for n, c in self._counters.items()
+                if n.startswith(prefix)}
+
     @property
     def gauges(self) -> dict[str, dict]:
         return {n: {"last": g.value, "min": g.vmin, "max": g.vmax}
@@ -382,6 +388,9 @@ class NullTelemetry:
 
     @property
     def counters(self):
+        return {}
+
+    def counters_prefixed(self, prefix):
         return {}
 
     @property

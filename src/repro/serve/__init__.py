@@ -1,0 +1,44 @@
+"""`repro.serve` — archive serving and transcode tier.
+
+The read-side counterpart of the streaming encoder: many consumers ask
+one process for decoded fields, and the process answers fast without
+blowing one shared memory ceiling.
+
+* :class:`ArchiveServer` — concurrent decode requests (submit/future or
+  blocking :meth:`~ArchiveServer.decode`), **coalesced** into stacked
+  ``decompress_batched`` dispatches when same-signature requests land in
+  the same batching window, fronted by a :class:`HotFieldCache` whose
+  bytes are charged to the streaming engine's
+  :class:`~repro.streaming.pipeline.ResidencyLedger`.
+* :func:`transcode` — re-target a stored archive to new per-field error
+  bounds, streaming entry-by-entry under the same ledger and writing a
+  fresh container byte-identical to a whole-snapshot recompress.
+
+Quickstart::
+
+    from repro.serve import ArchiveServer, transcode
+
+    with ArchiveServer("snapshot.nlz", max_bytes=1 << 30) as srv:
+        temp = srv.decode("temperature")               # cold: decodes
+        temp = srv.decode("temperature")               # hot: cache
+        slab = srv.decode("velocity_x", roi=(slice(8, 16),))
+        futs = [srv.submit(n) for n in ("f0", "f1", "f2")]
+        fields = [f.result() for f in futs]            # coalesced batch
+
+    transcode("snapshot.nlz", "cheap.nlz", bounds={"temperature": 1e-2},
+              rel_eb=1e-3)
+
+Instrumentation rides on ``repro.obs`` (``serve.*`` counters, a
+``serve.coalesce_width`` gauge, per-request spans under a ``serve`` root
+span) and fault handling on ``repro.faults`` (site ``"serve.request"``;
+an injected fault fails that request's future, never the server).
+"""
+from __future__ import annotations
+
+from .cache import HotFieldCache
+from .coalesce import Coalescer, Future, Request
+from .server import ArchiveServer
+from .transcode import ArchiveSource, transcode
+
+__all__ = ["ArchiveServer", "ArchiveSource", "Coalescer", "Future",
+           "HotFieldCache", "Request", "transcode"]

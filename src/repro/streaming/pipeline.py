@@ -256,7 +256,8 @@ def compress(source, sink, rel_eb: float | None = None, *,
              abs_eb: float | None = None, config=None,
              collect_stats: bool = True,
              stream: StreamConfig | None = None, bounds=None,
-             resume: bool = False) -> dict:
+             resume: bool = False, ledger: ResidencyLedger | None = None
+             ) -> dict:
     """Stream-compress a snapshot into an incremental archive container.
 
     ``source`` is anything :func:`repro.streaming.source.as_source`
@@ -274,6 +275,16 @@ def compress(source, sink, rel_eb: float | None = None, *,
     compressed — a crashed streaming run loses at most its in-flight
     group.  The salvaged container must carry a matching config prelude;
     a mismatch is a hard error, never silent mixing.
+
+    ``ledger``: hand in an existing :class:`ResidencyLedger` to share one
+    memory ceiling with other subsystems (the serving tier's hot-field
+    cache charges the same ledger, so a transcode running beside a cache
+    stays under *one* process budget).  When given, the ledger's own
+    ``max_bytes`` is the ceiling and ``max_resident_bytes`` from the
+    config/stream knobs is ignored; the reported
+    ``peak_resident_bytes`` then covers everything charged to the shared
+    ledger, not just this run.  Ledger sharing never changes archive
+    bytes — only admission order and peaks.
     """
     config = config or neurlz.NeurLZConfig(engine="streaming")
     stream = stream or StreamConfig()
@@ -282,6 +293,8 @@ def compress(source, sink, rel_eb: float | None = None, *,
     budget = (stream.max_resident_bytes
               if stream.max_resident_bytes is not None
               else config.max_resident_bytes)
+    if ledger is not None:
+        budget = ledger.max_bytes
     t0 = time.time()
     with tel.span("compress", root=True, engine="streaming") as root_sp:
         with tel.span("plan"):
@@ -337,7 +350,8 @@ def compress(source, sink, rel_eb: float | None = None, *,
             "config_sig": sig,
         }
         tcfg = config.train_config()
-        ledger = ResidencyLedger(budget, telemetry=tel)
+        if ledger is None:
+            ledger = ResidencyLedger(budget, telemetry=tel)
         writer = AsyncArchiveWriter(sink, config,
                                     collect_stats=collect_stats,
                                     queue_size=stream.writer_queue,
@@ -590,6 +604,13 @@ def compress(source, sink, rel_eb: float | None = None, *,
             if prefetched is not None:
                 prefetched[1].cancel()
             reader.shutdown(wait=True)
+            # Release every charge this run still holds — on the success
+            # path they are already gone, but an aborted run sharing an
+            # external ledger must not leave phantom bytes pinned against
+            # another subsystem's ceiling (e.g. the serving cache).
+            for k in list(ledger._items):
+                if k.startswith(("x:", "rec:", "ds:", "tmpx:", "convtmp")):
+                    ledger.drop(k)
 
 
 class PipelineScheduler:
@@ -609,10 +630,12 @@ class PipelineScheduler:
 
     def run(self, source, sink, rel_eb: float | None = None, *,
             abs_eb: float | None = None, collect_stats: bool = True,
-            bounds=None, resume: bool = False) -> dict:
+            bounds=None, resume: bool = False,
+            ledger: ResidencyLedger | None = None) -> dict:
         return compress(source, sink, rel_eb, abs_eb=abs_eb,
                         config=self.config, collect_stats=collect_stats,
-                        stream=self.stream, bounds=bounds, resume=resume)
+                        stream=self.stream, bounds=bounds, resume=resume,
+                        ledger=ledger)
 
 
 def compress_dict(fields, rel_eb: float | None = None, *,

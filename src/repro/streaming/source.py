@@ -198,8 +198,8 @@ def as_source(obj) -> ChunkedFieldSource:
         return obj
     if isinstance(obj, Mapping):
         return DictSource(obj)
-    if isinstance(obj, str) and os.path.isdir(obj):
-        return NpyDirSource(obj)
+    if isinstance(obj, (str, os.PathLike)) and os.path.isdir(obj):
+        return NpyDirSource(os.fspath(obj))
     if isinstance(obj, ChunkedFieldSource):
         return obj
     raise TypeError(f"cannot interpret {type(obj)} as a ChunkedFieldSource")

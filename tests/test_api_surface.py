@@ -21,7 +21,7 @@ def test_repro_all_snapshot():
         "ModelConfig", "EngineConfig", "RegulationConfig",
         "NeurLZConfig", "Telemetry", "TelemetryConfig",
         "FaultConfig", "FaultInjector", "InjectedFault", "RetryPolicy",
-        "CorruptArchiveError", "open",
+        "CorruptArchiveError", "open", "ArchiveServer", "transcode",
     ])
     for name in repro.__all__:
         assert getattr(repro, name) is not None
@@ -49,12 +49,13 @@ SIGNATURES = {
     "Archive.open":
         "(source, *, repair: 'bool' = False) -> \"'Archive'\"",
     "Archive.verify": "(self) -> 'dict'",
-    "Archive.decode": "(self, name: 'str') -> 'np.ndarray'",
+    "Archive.decode": "(self, name: 'str', roi=None) -> 'np.ndarray'",
     "Archive.decode_all":
         "(self, *, engine: 'str' = 'serial', reassemble: 'bool' = False) "
         "-> 'dict[str, np.ndarray]'",
     "Archive.bitrate": "(self, name: 'str | None' = None) -> 'dict'",
-    "Archive.save": "(self, path: 'str') -> 'int'",
+    # ``path`` is untyped on purpose: accepts str or os.PathLike
+    "Archive.save": "(self, path) -> 'int'",
     # bound spec
     "ErrorBound.__init__":
         "(self, rel: 'float | None' = None, abs: 'float | None' = None, "

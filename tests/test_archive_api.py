@@ -236,6 +236,99 @@ def test_decode_reassembles_blocked_field(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Region-of-interest decode
+# ---------------------------------------------------------------------------
+
+def test_roi_decode_plain_field(stream_path, serial_dec):
+    with Archive.open(stream_path) as arc:
+        full = serial_dec[NAMES[3]]
+        roi = (slice(2, 6), slice(1, 9), slice(None, None, 2))
+        assert np.array_equal(arc.decode(NAMES[3], roi=roi), full[roi])
+        # single slice + short tuples extend numpy-style
+        assert np.array_equal(arc.decode(NAMES[3], roi=slice(1, 4)),
+                              full[1:4])
+        assert np.array_equal(arc.decode(NAMES[3], roi=(slice(0, 3),)),
+                              full[0:3])
+
+
+def test_roi_rejects_bad_specs(stream_path):
+    with Archive.open(stream_path) as arc:
+        with pytest.raises(TypeError):
+            arc.decode(NAMES[3], roi=3)              # not a slice
+        with pytest.raises(TypeError):
+            arc.decode(NAMES[3], roi=(slice(0, 2), 1))
+        with pytest.raises(ValueError):
+            arc.decode(NAMES[3], roi=(slice(None),) * 9)
+
+
+@pytest.fixture(scope="module")
+def blocked_path(tmp_path_factory):
+    big = F.make_fields("nyx", shape=(16, 16, 16), seed=1)["temperature"]
+    bsrc = streaming.BlockedSource(streaming.DictSource({"huge": big}),
+                                   max_block_bytes=big.nbytes // 3)
+    path = str(tmp_path_factory.mktemp("roi") / "blocked.nlzs")
+    streaming.compress(bsrc, path, rel_eb=1e-3, config=_cfg("streaming"))
+    return path, big
+
+
+def test_roi_blocked_reads_only_covering_blocks(blocked_path):
+    path, big = blocked_path
+    with Archive.open(path) as arc:
+        man = arc.block_manifest["huge"]
+        blocks = man["blocks"]
+        assert len(blocks) >= 3
+        # slab entirely inside the first block: later blocks never read
+        # (ROI decode runs first so entry_reads only reflects it)
+        b0_name, b0_lo, b0_hi = blocks[0]
+        roi = (slice(b0_lo, b0_hi - 1), slice(2, 10))
+        out = arc.decode("huge", roi=roi)
+        touched = set(arc.reader.entry_reads)
+        assert b0_name in touched
+        assert all(bn not in touched for bn, _, _ in blocks[1:])
+        ref = arc.decode("huge")
+        assert np.array_equal(out, ref[roi])
+
+
+def test_roi_blocked_spans_and_steps(blocked_path):
+    path, big = blocked_path
+    with Archive.open(path) as arc:
+        ref = arc.decode("huge")
+        for roi in [(slice(3, 13),),                 # crosses block edges
+                    (slice(None, None, 3), slice(1, 8)),
+                    (slice(12, 2, -2),),             # negative step
+                    (slice(5, 5),)]:                 # empty selection
+            out = arc.decode("huge", roi=roi)
+            assert np.array_equal(out, ref[roi]), roi
+
+
+# ---------------------------------------------------------------------------
+# os.PathLike at the API boundary
+# ---------------------------------------------------------------------------
+
+def test_pathlib_round_trip(tmp_path, stream_path):
+    import pathlib
+    p = pathlib.Path(stream_path)
+    with Archive.open(p) as arc:                     # open via PathLike
+        assert arc.streaming
+        copy = tmp_path / "copy.nlzs"                # save via PathLike
+        n = arc.save(copy)
+        assert n == copy.stat().st_size
+    with Archive.open(copy) as arc2:
+        assert arc2.field_names == NAMES
+
+
+def test_compress_to_accepts_pathlike(tmp_path):
+    sub = {n: FIELDS[n] for n in NAMES[:2]}
+    sink = tmp_path / "direct.nlzs"                  # a pathlib.Path
+    nlz = repro.NeurLZ(epochs=2, engine="streaming")
+    arc = nlz.compress_to(sub, sink, rel_eb=1e-3)
+    assert arc.streaming and sink.exists()
+    assert np.array_equal(arc.decode(NAMES[0]),
+                          Archive.open(str(sink)).decode(NAMES[0]))
+    arc.close()
+
+
+# ---------------------------------------------------------------------------
 # Symmetric batched conventional decode (registry capability)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,432 @@
+"""The serving tier: coalesced concurrent decode, the ledger-charged
+hot-field cache, transcode byte-parity and resume, and fault isolation.
+
+Coalescing assertions go through :class:`registry.DecodeStats` — the
+dispatch counters are the contract's observable: N concurrent
+same-signature requests must execute as **one** stacked
+``decompress_batched`` dispatch.  Determinism comes from
+``auto_start=False``: requests queue first, the dispatcher starts after,
+so one batch holds them all regardless of scheduler timing.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+import repro
+from repro import core, obs, streaming
+from repro.core import archive as arc_io
+from repro.core.archive_api import Archive
+from repro.data import fields as F
+from repro.faults import FaultConfig, FaultInjector, InjectedFault
+from repro.serve import ArchiveServer, HotFieldCache, transcode
+from repro.streaming.pipeline import ResidencyLedger
+
+FIELDS = F.make_fields("nyx", shape=(8, 16, 16), seed=11)
+NAMES = list(FIELDS)
+CROSS = {NAMES[0]: (NAMES[1],)}
+FIELD_NBYTES = FIELDS[NAMES[0]].nbytes
+
+
+def _cfg(engine="streaming", **kw):
+    return core.NeurLZConfig(epochs=2, mode="strict", engine=engine, **kw)
+
+
+@pytest.fixture(scope="module")
+def snap_path(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("serve") / "snap.nlzs")
+    streaming.compress(FIELDS, path, rel_eb=1e-3,
+                       config=_cfg(cross_field=CROSS))
+    return path
+
+
+@pytest.fixture(scope="module")
+def reference(snap_path):
+    with Archive.open(snap_path) as arc:
+        return {n: arc.decode(n) for n in NAMES}
+
+
+# ---------------------------------------------------------------------------
+# Coalescing: N concurrent requests -> one stacked dispatch
+# ---------------------------------------------------------------------------
+
+def test_concurrent_requests_coalesce_to_one_dispatch(snap_path, reference):
+    srv = ArchiveServer(snap_path, max_bytes=1 << 30, auto_start=False)
+    futs = {}
+    barrier = threading.Barrier(len(NAMES))
+
+    def client(name):
+        barrier.wait()
+        futs[name] = srv.submit(name)
+
+    threads = [threading.Thread(target=client, args=(n,)) for n in NAMES]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    srv.start()
+    out = {n: futs[n].result(30) for n in NAMES}
+    srv.close()
+    # bit-identical to direct Archive.decode, per field
+    for n in NAMES:
+        assert np.array_equal(out[n], reference[n]), n
+    # the whole batch (4 same-signature fields; the aux producer is one of
+    # them, so its conv dedups) ran as ONE stacked dispatch
+    st = srv.decode_stats
+    assert st.batched == 1 and st.single == 0, st.as_dict()
+    assert st.max_width == len(NAMES)
+    assert st.archives == len(NAMES)
+
+
+def test_duplicate_requests_share_one_decode(snap_path, reference):
+    srv = ArchiveServer(snap_path, max_bytes=1 << 30, auto_start=False)
+    futs = [srv.submit(NAMES[3]) for _ in range(5)]
+    srv.start()
+    outs = [f.result(30) for f in futs]
+    srv.close()
+    for o in outs:
+        assert np.array_equal(o, reference[NAMES[3]])
+    # five requests, one field, one decode dispatch
+    assert srv.decode_stats.dispatches == 1
+    assert srv.decode_stats.archives == 1
+
+
+def test_blocking_decode_and_stats_surface(snap_path, reference):
+    with ArchiveServer(snap_path, max_bytes=1 << 30) as srv:
+        out = srv.decode(NAMES[2])
+        assert np.array_equal(out, reference[NAMES[2]])
+        st = srv.stats()
+        assert st["requests"] == 1
+        assert st["decode"]["archives"] >= 1
+        assert st["max_bytes"] == 1 << 30
+
+
+def test_copy_results_isolation(snap_path, reference):
+    """Default serving hands each caller its own buffer: mutating one
+    tenant's result must not corrupt the cache other tenants read."""
+    with ArchiveServer(snap_path, max_bytes=1 << 30) as srv:
+        a = srv.decode(NAMES[3])
+        a[:] = -1.0
+        b = srv.decode(NAMES[3])
+        assert np.array_equal(b, reference[NAMES[3]])
+
+
+# ---------------------------------------------------------------------------
+# Cache: hits skip disk, eviction respects the shared ledger ceiling
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_skips_entry_reads(snap_path):
+    tel = obs.Telemetry()
+    arc = Archive.open(snap_path)
+    srv = ArchiveServer(arc, telemetry=tel, max_bytes=1 << 30)
+    srv.decode(NAMES[3])
+    n_reads = len(arc.reader.entry_reads)
+    srv.decode(NAMES[3])                     # hot: no further disk touch
+    assert len(arc.reader.entry_reads) == n_reads
+    c = tel.counters_prefixed("serve.cache.")
+    assert c.get("serve.cache.hits", 0) >= 1
+    srv.close(close_archives=True)
+
+
+def test_cache_never_exceeds_ledger_ceiling(snap_path, reference):
+    # room for ~2.5 decoded fields: serving all 4 (plus the aux rec) must
+    # evict, not blow the ceiling
+    ceiling = int(FIELD_NBYTES * 2.5)
+    tel = obs.Telemetry()
+    ledger = ResidencyLedger(ceiling, telemetry=tel)
+    with ArchiveServer(snap_path, ledger=ledger, telemetry=tel) as srv:
+        for n in NAMES:
+            assert np.array_equal(srv.decode(n), reference[n])
+            assert ledger.current <= ceiling
+        assert ledger.peak <= ceiling
+        assert tel.counters_prefixed("serve.cache.").get(
+            "serve.cache.evictions", 0) >= 1
+    assert ledger.current == 0               # close releases every charge
+
+
+def test_cache_rejects_when_everything_pinned():
+    ledger = ResidencyLedger(100)
+    cache = HotFieldCache(ledger)
+    a = np.zeros(20, np.uint8)
+    b = np.zeros(90, np.uint8)
+    assert cache.put("a", a)
+    cache.pin("a")
+    # b alone fits the ceiling only if a is evicted — but a is pinned
+    assert not cache.put("b", b)
+    assert "a" in cache and "b" not in cache
+    assert ledger.current <= 100
+    cache.unpin("a")
+    assert cache.put("b", b)                 # now a may be evicted
+    assert "a" not in cache and "b" in cache
+    assert ledger.current <= 100
+
+
+def test_cache_pin_is_refcounted():
+    ledger = ResidencyLedger(100)
+    cache = HotFieldCache(ledger)
+    cache.put("x", np.zeros(60, np.uint8))
+    cache.pin("x")
+    cache.pin("x")
+    cache.unpin("x")
+    assert not cache.put("y", np.zeros(80, np.uint8))   # still pinned once
+    cache.unpin("x")
+    assert cache.put("y", np.zeros(80, np.uint8))
+
+
+def test_aux_closure_cached_and_reused(snap_path):
+    """NAMES[0] depends on NAMES[1]'s conv rec; after serving NAMES[0]
+    cold, a repeat decode with an invalidated main key must reuse the
+    cached aux closure instead of re-reading NAMES[1] from disk."""
+    arc = Archive.open(snap_path)
+    srv = ArchiveServer(arc, max_bytes=1 << 30)
+    srv.decode(NAMES[0])
+    aux_key = ("aux", srv.archive_ids[0], NAMES[1])
+    assert aux_key in srv.cache
+    srv.cache.invalidate((srv.archive_ids[0], NAMES[0], None))
+    n_reads = len(arc.reader.entry_reads)
+    srv.decode(NAMES[0])
+    reads = arc.reader.entry_reads[n_reads:]
+    assert NAMES[1] not in reads             # closure came from the cache
+    srv.close(close_archives=True)
+
+
+# ---------------------------------------------------------------------------
+# Ledger-ceiling stress (hypothesis when available, seeded fallback always)
+# ---------------------------------------------------------------------------
+
+def _stress_cache(seed: int, ceiling: int) -> None:
+    rng = np.random.default_rng(seed)
+    ledger = ResidencyLedger(ceiling)
+    cache = HotFieldCache(ledger)
+    pinned: list = []
+    for step in range(200):
+        op = rng.integers(0, 4)
+        key = int(rng.integers(0, 12))
+        if op == 0:
+            cache.put(key, np.zeros(int(rng.integers(1, ceiling)), np.uint8))
+        elif op == 1:
+            cache.get(key)
+        elif op == 2:
+            cache.pin(key)
+            pinned.append(key)
+        elif op == 3 and pinned:
+            cache.unpin(pinned.pop(int(rng.integers(0, len(pinned)))))
+        assert ledger.current <= ceiling, f"step {step}: over ceiling"
+        assert cache.resident_bytes == ledger.current
+    for k in list(pinned):
+        cache.unpin(k)
+    cache.clear()
+    assert ledger.current == 0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 42])
+def test_cache_stress_seeded(seed):
+    _stress_cache(seed, ceiling=1000)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # hypothesis is an optional [dev] extra
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), ceiling=st.integers(64, 4096))
+    def test_property_cache_respects_ceiling(seed, ceiling):
+        _stress_cache(seed, ceiling)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_cache_respects_ceiling():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# ROI requests route through the server
+# ---------------------------------------------------------------------------
+
+def test_server_roi_request(snap_path, reference):
+    with ArchiveServer(snap_path, max_bytes=1 << 30) as srv:
+        roi = (slice(2, 6), slice(0, 8))
+        out = srv.decode(NAMES[3], roi=roi)
+        assert np.array_equal(out, reference[NAMES[3]][2:6, 0:8])
+        # ROI results cache under their own key
+        out2 = srv.decode(NAMES[3], roi=roi)
+        assert np.array_equal(out2, out)
+
+
+# ---------------------------------------------------------------------------
+# Fault isolation: an injected fault fails the request, not the server
+# ---------------------------------------------------------------------------
+
+def test_injected_fault_fails_request_server_keeps_serving(snap_path,
+                                                           reference):
+    fc = FaultConfig(injector=FaultInjector({"serve.request": 0}))
+    with ArchiveServer(snap_path, max_bytes=1 << 30, faults=fc,
+                       auto_start=False) as srv:
+        doomed = srv.submit(NAMES[3])
+        srv.start()
+        with pytest.raises(InjectedFault):
+            doomed.result(30)
+        # same server, next request: serves fine
+        ok = srv.decode(NAMES[2])
+        assert np.array_equal(ok, reference[NAMES[2]])
+        st = srv.stats()
+        assert st["counters"].get("serve.request_errors", 0) in (0, 1)
+
+
+def test_fault_in_batch_fails_only_affected_field(snap_path, reference):
+    """One bad field in a coalesced batch must not poison its batchmates."""
+    fc = FaultConfig(injector=FaultInjector({"serve.request": 0}))
+    srv = ArchiveServer(snap_path, max_bytes=1 << 30, faults=fc,
+                        auto_start=False)
+    futs = {n: srv.submit(n) for n in NAMES}
+    srv.start()
+    results, errors = {}, {}
+    for n, f in futs.items():
+        try:
+            results[n] = f.result(30)
+        except InjectedFault as e:
+            errors[n] = e
+    srv.close()
+    assert len(errors) == 1                  # exactly one request failed
+    for n, out in results.items():
+        assert np.array_equal(out, reference[n]), n
+
+
+def test_unknown_field_fails_cleanly(snap_path):
+    with ArchiveServer(snap_path, max_bytes=1 << 30) as srv:
+        with pytest.raises(KeyError):
+            srv.decode("no_such_field")
+        assert srv.running
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant: several archives behind one server, one ledger
+# ---------------------------------------------------------------------------
+
+def test_multi_archive_serving(tmp_path, snap_path, reference):
+    other = {n: FIELDS[n] * 2.0 for n in NAMES[:2]}
+    p2 = str(tmp_path / "other.nlzs")
+    streaming.compress(other, p2, rel_eb=1e-3, config=_cfg())
+    ref2 = {n: Archive.open(p2).decode(n) for n in other}
+    srv = ArchiveServer({"a": snap_path, "b": p2}, max_bytes=1 << 30,
+                        auto_start=False)
+    fa = srv.submit(NAMES[0], archive_id="a")
+    fb = srv.submit(NAMES[0], archive_id="b")
+    srv.start()
+    assert np.array_equal(fa.result(30), reference[NAMES[0]])
+    assert np.array_equal(fb.result(30), ref2[NAMES[0]])
+    with pytest.raises(ValueError):          # ambiguous without an id
+        srv.submit(NAMES[0])
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# Transcode: byte-parity with whole-snapshot recompress, resume, ledger
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("src_version", (1, 2))
+def test_transcode_byte_parity_vs_recompress(tmp_path, src_version,
+                                             reference):
+    src = str(tmp_path / f"src_v{src_version}.nlzs")
+    streaming.compress(FIELDS, src, rel_eb=1e-3,
+                       config=_cfg(cross_field=CROSS),
+                       stream=streaming.StreamConfig(
+                           container_version=src_version))
+    cfg = _cfg(cross_field=CROSS)
+    dst = str(tmp_path / "re.nlzs")
+    out = transcode(src, dst, rel_eb=1e-2, config=cfg)
+    assert out.field_names == NAMES
+    # reference: decode the whole snapshot, recompress under same bounds
+    ref_dst = str(tmp_path / "ref.nlzs")
+    with Archive.open(src) as a:
+        decoded = {n: a.decode(n) for n in NAMES}
+    streaming.compress(decoded, ref_dst, rel_eb=1e-2, config=cfg)
+    with arc_io.ArchiveReader(dst) as r1, \
+            arc_io.ArchiveReader(ref_dst) as r2:
+        for n in NAMES:
+            assert arc_io.dumps(r1.read_entry(n)) \
+                == arc_io.dumps(r2.read_entry(n)), n
+    out.close()
+
+
+def test_transcode_respects_new_bounds(tmp_path, snap_path):
+    from repro.core.bounds import ErrorBound
+    dst = str(tmp_path / "requal.nlzs")
+    out = transcode(snap_path, dst, config=_cfg(cross_field=CROSS),
+                    bounds={NAMES[0]: ErrorBound(rel=1e-1, mode="relaxed")},
+                    rel_eb=1e-2)
+    assert out.entry(NAMES[0])["mode"] == "relaxed"
+    assert out.entry(NAMES[1])["mode"] == "strict"
+    # re-targeted bound actually holds on the transcoded data
+    src_dec = Archive.open(snap_path).decode(NAMES[0])
+    re_dec = out.decode(NAMES[0])
+    rng = float(src_dec.max() - src_dec.min())
+    # relaxed regulation honors the paper's 2x-bound envelope
+    assert float(np.abs(re_dec - src_dec).max()) <= 2e-1 * rng * (1 + 1e-6)
+    out.close()
+
+
+def test_transcode_shares_ledger_and_stays_bounded(tmp_path, snap_path):
+    ledger = ResidencyLedger(64 << 20)
+    dst = str(tmp_path / "led.nlzs")
+    out = transcode(snap_path, dst, rel_eb=1e-2,
+                    config=_cfg(cross_field=CROSS), ledger=ledger)
+    assert out.report["peak_resident_bytes"] <= 64 << 20
+    assert ledger.current == 0               # transcode released its charges
+    out.close()
+
+
+def test_transcode_blocked_source_preserves_manifest(tmp_path):
+    big = F.make_fields("nyx", shape=(16, 16, 16), seed=3)["temperature"]
+    bsrc = streaming.BlockedSource(streaming.DictSource({"huge": big}),
+                                   max_block_bytes=big.nbytes // 3)
+    src = str(tmp_path / "blocked.nlzs")
+    streaming.compress(bsrc, src, rel_eb=1e-3, config=_cfg())
+    dst = str(tmp_path / "blocked_re.nlzs")
+    out = transcode(src, dst, rel_eb=1e-2, config=_cfg(),
+                    bounds={"huge": 1e-2})   # original name expands to blocks
+    assert "huge" in out.block_manifest
+    assert out.block_manifest == Archive.open(src).block_manifest
+    assert out.decode("huge").shape == big.shape
+    out.close()
+
+
+def test_transcode_resume_byte_identical(tmp_path, snap_path):
+    cfg = _cfg(cross_field=CROSS)
+    whole = str(tmp_path / "whole.nlzs")
+    transcode(snap_path, whole, rel_eb=1e-2, config=cfg).close()
+    # tear the finished output mid-container, then resume the transcode
+    torn = str(tmp_path / "torn.nlzs")
+    blob = open(whole, "rb").read()
+    open(torn, "wb").write(blob[:int(len(blob) * 0.6)])
+    out = transcode(snap_path, torn, rel_eb=1e-2, config=cfg, resume=True)
+    assert isinstance(out.report["resumed_fields"], list)
+    # per-entry byte identity with the uninterrupted run (the PR 8 resume
+    # contract: record order may differ, entry bytes may not), and a
+    # sealed, checksum-clean container
+    rep = out.verify()
+    assert rep["ok"] and rep["sealed"]
+    with Archive.open(whole) as ref:
+        for n in NAMES:
+            assert arc_io.dumps(out.entry(n)) == arc_io.dumps(ref.entry(n)), n
+    out.close()
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: spans parent under the server root
+# ---------------------------------------------------------------------------
+
+def test_server_spans_parent_to_root(snap_path):
+    tel = obs.Telemetry()
+    with ArchiveServer(snap_path, max_bytes=1 << 30, telemetry=tel) as srv:
+        srv.decode(NAMES[3])
+    names = [s.name for s in tel.spans]
+    assert "serve" in names
+    assert "serve.batch" in names
+    root = next(s for s in tel.spans if s.name == "serve")
+    batches = [s for s in tel.spans if s.name == "serve.batch"]
+    assert all(s.parent == root.id for s in batches)
